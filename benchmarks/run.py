@@ -1,0 +1,35 @@
+"""Benchmark runner: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5]
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline terms per (arch x shape x
+mesh) come from the dry-run (see repro.launch.dryrun and EXPERIMENTS.md);
+these benchmarks measure the paper's behavioural claims with real device ops
+on reduced configs.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    args = ap.parse_args()
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import figures
+
+    print("name,us_per_call,derived")
+    for fn in figures.ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        for name, us, derived in fn():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,226 @@
+"""Elastic arena: bucket ladder + the device-side data plane.
+
+JAX arrays are static-shaped, so VM resize (virtio-mem plug/unplug) becomes
+a ladder of AOT-compiled arena sizes.  Moving *down* the ladder is where the
+two managers diverge — the paper's entire point:
+
+  * HotMem: live partitions are whole rows; shrink = contiguous prefix
+    truncation (plus O(1) metadata).  Zero gathers, zero migrations.
+  * Vanilla: live blocks are scattered; shrink must first run a migration
+    pass (``apply_migrations`` — gather+scatter device copies), then
+    truncate.  Copy bytes grow with occupancy.
+
+Both paths are real jitted device ops so benchmarks measure actual copies,
+not a model of them.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arena import ArenaSpec, ReclaimEvent
+from repro.core.hotmem import HotMemManager
+from repro.core.vanilla import VanillaPagedManager
+
+# ---------------------------------------------------------------------------
+# Bucket ladder
+# ---------------------------------------------------------------------------
+
+
+def bucket_ladder(max_units: int, min_units: int = 1,
+                  factor: float = 2.0) -> list[int]:
+    """Geometric ladder of arena sizes (in partitions/blocks), ascending."""
+    sizes = {max_units}
+    u = max_units
+    while u > min_units:
+        u = max(min_units, int(u / factor))
+        sizes.add(u)
+    return sorted(sizes)
+
+
+def target_bucket(ladder: list[int], demand: int) -> int:
+    """Smallest bucket covering current demand (with its own headroom)."""
+    for b in ladder:
+        if b >= demand:
+            return b
+    return ladder[-1]
+
+
+# ---------------------------------------------------------------------------
+# Device-side data plane (jitted; shapes static per (rows, move-capacity))
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def zero_rows(caches, lo: jax.Array, count: jax.Array):
+    """Zero arena rows [lo, lo+count) — plug-time zero-fill (zeroing is
+    elided on the reclaim path, per the paper)."""
+    def z(x):
+        idx = jnp.arange(x.shape[0])
+        m = (idx >= lo) & (idx < lo + count)
+        return jnp.where(m.reshape((-1,) + (1,) * (x.ndim - 1)), 0, x)
+    return jax.tree.map(z, caches)
+
+
+def slice_rows(caches, new_rows: int):
+    """HotMem bucket-shrink: contiguous prefix truncation (no gathers)."""
+    return jax.tree.map(lambda x: x[:new_rows], caches)
+
+
+def grow_rows(caches, new_rows: int):
+    """Bucket-grow: extend the leading axis with zeroed rows."""
+    def g(x):
+        pad = [(0, new_rows - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, pad)
+    return jax.tree.map(g, caches)
+
+
+@jax.jit
+def apply_migrations(pool, src: jax.Array, dst: jax.Array, count: jax.Array):
+    """Vanilla migration pass: pool[dst[i]] = pool[src[i]] for i < count.
+    src/dst are fixed-capacity int32 vectors (padded with identity moves)
+    so one compiled executable serves every shrink event."""
+    idx = jnp.arange(src.shape[0])
+    live = idx < count
+    safe_src = jnp.where(live, src, 0)
+
+    def mig(x):
+        oob = x.shape[0]                      # dead slots scatter out of range
+        sdst = jnp.where(live, dst, oob)
+        return x.at[sdst].set(x[safe_src], mode="drop")
+    return jax.tree.map(mig, pool)
+
+
+def pool_rows(pool) -> int:
+    return jax.tree.leaves(pool)[0].shape[0]
+
+
+def gather_blocks(pool, tables: jax.Array):
+    """Paged read: (NB, BT, ...) pool + (P, max_blocks) tables ->
+    (P, max_blocks*BT, ...) row-contiguous view.  This is the per-step
+    gather the vanilla layout pays (fused by the Pallas paged kernel on
+    TPU); HotMem's contiguous rows skip it entirely."""
+    def g(x):
+        bt = x.shape[1]
+        out = x[jnp.maximum(tables, 0)]             # (P, MB, BT, ...)
+        out = jnp.where(
+            (tables >= 0).reshape(tables.shape + (1,) * (x.ndim - 1)),
+            out, 0)
+        return out.reshape((tables.shape[0], tables.shape[1] * bt)
+                           + x.shape[2:])
+    return jax.tree.map(g, pool)
+
+
+def scatter_blocks(pool, rows, tables: jax.Array):
+    """Write row-layout updates back into the pool through the tables."""
+    def s(x, r):
+        bt = x.shape[1]
+        r = r.reshape((tables.shape[0], tables.shape[1], bt) + x.shape[2:])
+        flat_idx = jnp.maximum(tables, 0).reshape(-1)
+        upd = r.reshape((-1, bt) + x.shape[2:])
+        keep = (tables >= 0).reshape(-1)
+        upd = jnp.where(keep.reshape((-1,) + (1,) * (upd.ndim - 1)),
+                        upd, x[flat_idx])
+        return x.at[flat_idx].set(upd)
+    return jax.tree.map(s, pool, rows)
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+
+class ElasticArena:
+    """One replica's arena: manager (metadata) + optional device cache tree.
+
+    ``mode``: "hotmem" | "vanilla" | "static" (statically over-provisioned —
+    the paper's third comparison point: never resizes).
+    """
+
+    MOVE_CAPACITY = 256      # padded migration vector (one executable)
+
+    def __init__(self, cfg, spec: ArenaSpec, mode: str, caches=None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.spec = spec
+        self.mode = mode
+        self.caches = caches
+        if mode == "vanilla":
+            self.manager = VanillaPagedManager(spec, seed=seed)
+        else:
+            self.manager = HotMemManager(spec)
+        self.plug_seconds: list[float] = []
+
+    # ------------------------------------------------------------ lifecycle
+    def admit(self, req: str):
+        return self.manager.reserve(req)
+
+    def on_tokens(self, req: str, n: int) -> bool:
+        r = self.manager.grow(req, n)
+        return r is not None and r is not False
+
+    def finish(self, req: str):
+        return self.manager.release(req)
+
+    # ------------------------------------------------------------- elastic
+    def units(self) -> int:
+        if self.mode == "vanilla":
+            return self.manager.pool_blocks
+        return self.manager.plugged
+
+    def plug(self, units: int) -> float:
+        """Grow the arena; returns wall seconds (incl. zero-fill)."""
+        if self.mode == "static":
+            return 0.0
+        t0 = time.perf_counter()
+        old = self.units()
+        added = self.manager.plug(units)
+        if added and self.caches is not None:
+            self.caches = grow_rows(self.caches, old + added)
+            self.caches = zero_rows(self.caches, jnp.asarray(old),
+                                    jnp.asarray(added))
+            jax.block_until_ready(jax.tree.leaves(self.caches)[0])
+        dt = time.perf_counter() - t0
+        self.plug_seconds.append(dt)
+        return dt
+
+    def unplug(self, units: int) -> ReclaimEvent:
+        """Shrink the arena; HotMem = metadata + prefix slice, vanilla =
+        migration copies + prefix slice.  Real device timings."""
+        assert self.mode != "static"
+        t0 = time.perf_counter()
+        if self.mode == "hotmem":
+            ev = self.manager.unplug(units)
+            if ev.reclaimed_units and self.caches is not None:
+                self.caches = slice_rows(self.caches, self.manager.plugged)
+                jax.block_until_ready(jax.tree.leaves(self.caches)[0])
+            ev.wall_seconds = time.perf_counter() - t0
+            return ev
+        # vanilla: plan migrations, run copies, then commit + truncate
+        k, moves = self.manager.shrink_plan(units)
+        copy_s = 0.0
+        if self.caches is not None and moves:
+            nmov = len(moves)
+            cap = max(self.MOVE_CAPACITY,
+                      ((nmov + 255) // 256) * 256)
+            src = np.zeros(cap, np.int32)
+            dst = np.full(cap, pool_rows(self.caches), np.int32)
+            src[:nmov] = [m[0] for m in moves]
+            dst[:nmov] = [m[1] for m in moves]
+            tc = time.perf_counter()
+            self.caches = apply_migrations(self.caches, jnp.asarray(src),
+                                           jnp.asarray(dst),
+                                           jnp.asarray(nmov))
+            jax.block_until_ready(jax.tree.leaves(self.caches)[0])
+            copy_s = time.perf_counter() - tc
+        ev = self.manager.apply_shrink(k, moves, copy_seconds=copy_s)
+        if k and self.caches is not None:
+            self.caches = jax.tree.map(
+                lambda x: x[:self.manager.pool_blocks], self.caches)
+            jax.block_until_ready(jax.tree.leaves(self.caches)[0])
+        ev.wall_seconds = time.perf_counter() - t0
+        return ev

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+NEG_INF = -2.0 ** 30
+
+
+def _softcap(x, cap):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def partition_attention(q, k_cache, v_cache, positions, *, window: int = 0,
+                        logit_cap: float = 0.0, scale: float | None = None):
+    """Decode attention over contiguous (HotMem partition) KV rows.
+
+    q: (P, Hkv, G, Dh); k/v_cache: (P, T, Hkv, Dh) ring caches;
+    positions: (P,) global position of the current token (already written).
+    Returns (P, Hkv, G, Dh).
+    """
+    p, t = k_cache.shape[:2]
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    slots = jnp.arange(t, dtype=jnp.int32)[None, :]
+    gidx = positions[:, None] - ((positions[:, None] - slots) % t)
+    valid = gidx >= 0
+    if window:
+        valid &= gidx > positions[:, None] - window
+    s = jnp.einsum("bkgd,btkd->bkgt", q, k_cache,
+                   preferred_element_type=f32) * scale
+    s = _softcap(s, logit_cap)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgt,btkd->bkgd", w.astype(v_cache.dtype), v_cache)
+
+
+def paged_attention(q, k_pool, v_pool, tables, positions, *,
+                    logit_cap: float = 0.0, scale: float | None = None):
+    """Decode attention over the vanilla paged layout.
+
+    q: (P, Hkv, G, Dh); k/v_pool: (NB, BT, Hkv, Dh);
+    tables: (P, MB) int32 block ids (-1 = unmapped);
+    positions: (P,) current token position (token i lives in logical block
+    i // BT at offset i % BT — linear fill, no ring).
+    """
+    nb, bt = k_pool.shape[:2]
+    mb = tables.shape[1]
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    k_rows = k_pool[jnp.maximum(tables, 0)]          # (P, MB, BT, Hkv, Dh)
+    v_rows = v_pool[jnp.maximum(tables, 0)]
+    sh = (tables.shape[0], mb * bt) + k_pool.shape[2:]
+    k_rows = k_rows.reshape(sh)
+    v_rows = v_rows.reshape(sh)
+    tok = jnp.arange(mb * bt, dtype=jnp.int32)[None, :]
+    valid = (tok <= positions[:, None]) & \
+        (jnp.repeat(tables, bt, axis=1) >= 0)
+    s = jnp.einsum("bkgd,btkd->bkgt", q, k_rows,
+                   preferred_element_type=f32) * scale
+    s = _softcap(s, logit_cap)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgt,btkd->bkgd", w.astype(v_rows.dtype), v_rows)
+
+
+def kv_compact(pool, src, dst, count):
+    """Migration oracle: pool[dst[i]] = pool[src[i]] for i < count."""
+    live = jnp.arange(src.shape[0]) < count
+    sdst = jnp.where(live, dst, pool.shape[0])
+    return pool.at[sdst].set(pool[jnp.where(live, src, 0)], mode="drop")

@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x shape) cell on
+# the production meshes and extract roofline inputs.
+#
+# The two lines above MUST run before ANY jax import (jax locks the device
+# count at first init); 512 placeholder host devices back the 2x16x16 mesh.
+
+"""Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+      --shape decode_32k [--multi-pod] [--out results.jsonl]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Per cell this lowers the real step function (train_step with optimizer, or
+prefill/serve step with donated caches), compiles it, and records
+memory_analysis() (proves it fits 16 GiB/chip), cost_analysis() FLOPs/bytes,
+and the collective schedule parsed from the compiled HLO.
+"""
+
+import argparse
+import json
+import math
+import time
+import traceback
+from typing import Any
+
+import jax
+
+from repro.configs.base import SHAPES, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import default_grad_accum, input_specs
+from repro.roofline import (Roofline, cost_flops_bytes, hbm_traffic_model,
+                            model_flops_per_chip, parse_collective_bytes)
+from repro.sharding import serve_rules_for, sharding_ctx, train_rules_for
+
+HBM_PER_CHIP = 16 * 2 ** 30          # TPU v5e
+
+
+def _memory_stats(compiled) -> dict[str, float]:
+    try:
+        m = compiled.memory_analysis()
+        return {
+            "argument_bytes": float(m.argument_size_in_bytes),
+            "output_bytes": float(m.output_size_in_bytes),
+            "temp_bytes": float(m.temp_size_in_bytes),
+            "alias_bytes": float(m.alias_size_in_bytes),
+            "peak_bytes": float(m.argument_size_in_bytes
+                                + m.output_size_in_bytes
+                                + m.temp_size_in_bytes
+                                - m.alias_size_in_bytes),
+        }
+    except Exception as e:                      # backend without support
+        return {"error": repr(e)}
+
+
+def f32_weight_upcast_bytes(hlo_text: str, cfg, mesh, rules) -> int:
+    """CPU-backend artifact: XLA-CPU emulates bf16 matmuls by hoisting f32
+    copies of the (stacked, sharded) weight operands; TPU MXUs consume bf16
+    natively, so these temps don't exist on the target.  Sum the f32 tensors
+    in the compiled module whose shapes exactly match bf16 param shards."""
+    import re as _re
+    from repro.models.layers import tree_map_specs
+    from repro.models.model import param_specs
+    from repro.sharding import named_sharding
+    import numpy as _np
+    shard_shapes: set[tuple[int, ...]] = set()
+
+    def acc(s):
+        if _np.dtype(s.dtype).itemsize != 2 or len(s.shape) < 2:
+            return
+        shard = named_sharding(s.axes, s.shape, mesh, rules)\
+            .shard_shape(s.shape) if mesh is not None else s.shape
+        shard_shapes.add(tuple(shard))
+        shard_shapes.add(tuple(s.shape))   # FSDP-gathered full-shape copies
+
+    tree_map_specs(acc, param_specs(cfg))
+    seen: set[tuple[int, ...]] = set()
+    total = 0
+    for m in _re.finditer(r"= f32\[([0-9,]+)\]", hlo_text):
+        dims = tuple(int(x) for x in m.group(1).split(","))
+        if dims in shard_shapes and dims not in seen:
+            seen.add(dims)                 # buffers of one shape are reused
+            total += 4 * math.prod(dims)
+    return total
+
+
+def lower_cell(arch, shape_name: str, *, multi_pod: bool = False,
+               mesh="auto", cfg=None, grad_accum=None, rules=None):
+    """Build mesh + specs and lower the cell's step function (no compile).
+    ``mesh=None`` lowers unsharded (analysis mode); ``cfg`` may override the
+    registry config (depth-reduced analysis lowering)."""
+    cfg = cfg or get_config(arch)
+    cell = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return None, "skip: pure full-attention arch at 500k (DESIGN.md)"
+    if mesh == "auto":
+        mesh = make_production_mesh(multi_pod=multi_pod)
+
+    if cell.kind == "train":
+        from repro.training.train_step import make_train_step
+        rules = rules or (train_rules_for(cfg) if mesh is not None else {})
+        accum = grad_accum or (default_grad_accum(cfg, cell, mesh, rules)
+                               if mesh is not None else 1)
+        specs = input_specs(cfg, shape_name, mesh, rules)
+        step = make_train_step(cfg, grad_accum=accum)
+        with sharding_ctx(mesh, rules):
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(
+                specs["state"], specs["batch"])
+        return (lowered, {"grad_accum": accum, "mesh": mesh,
+                          "rules": rules}), None
+
+    rules = rules or (serve_rules_for(cfg, shape_name)
+                      if mesh is not None else {})
+    specs = input_specs(cfg, shape_name, mesh, rules)
+    from repro.models import model as M
+    if cell.kind == "prefill":
+        def step(params, batch, caches):
+            return M.prefill(cfg, params, batch, caches)
+        with sharding_ctx(mesh, rules):
+            lowered = jax.jit(step, donate_argnums=(2,)).lower(
+                specs["params"], specs["batch"], specs["caches"])
+    else:
+        def step(params, tokens, positions, caches):
+            return M.decode_step(cfg, params, tokens, positions, caches)
+        with sharding_ctx(mesh, rules):
+            lowered = jax.jit(step, donate_argnums=(3,)).lower(
+                specs["params"], specs["tokens"], specs["positions"],
+                specs["caches"])
+    return (lowered, {"grad_accum": 1, "mesh": mesh, "rules": rules}), None
+
+
+def analysis_flops_bytes(arch: str, shape_name: str,
+                         n_chips: int) -> tuple[float, float]:
+    """Per-chip (FLOPs, HBM bytes) via unrolled depth-extrapolated lowering:
+    lower the unsharded step at 1 and 2 scan groups (scans unrolled so
+    HloCostAnalysis sees every layer) and extend linearly to full depth —
+    exact, since scanned groups are identical.  Train cells lower with
+    grad_accum=1 (identical total math).  See DESIGN.md / EXPERIMENTS.md
+    methodology."""
+    import dataclasses as dc
+    from repro.tracemode import analysis_mode
+    cfg = get_config(arch)
+    pat, tail = len(cfg.block_pattern), len(cfg.tail_pattern)
+    vals = {}
+    for k in (1, 2):
+        cfg_k = dc.replace(
+            cfg, name=f"{cfg.name}@depth{k}", num_layers=pat * k + tail,
+            encoder_layers=k if cfg.encoder_layers else 0)
+        with analysis_mode():
+            out, skip = lower_cell(arch, shape_name, mesh=None, cfg=cfg_k,
+                                   grad_accum=1)
+            assert not skip, skip
+            lowered, _ = out
+        vals[k] = cost_flops_bytes(lowered.cost_analysis())
+    n = cfg.n_groups
+    flops = vals[1][0] + (n - 1) * (vals[2][0] - vals[1][0])
+    hbm = vals[1][1] + (n - 1) * (vals[2][1] - vals[1][1])
+    return flops / n_chips, hbm / n_chips
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True, tag: str = "", quant: bool = False,
+             **lower_kwargs) -> dict[str, Any]:
+    cell = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "ok": False}
+    if tag:
+        rec["tag"] = tag
+    t0 = time.time()
+    import contextlib
+    from repro.models.layers import weight_quant
+    qctx = weight_quant() if quant else contextlib.nullcontext()
+    try:
+        ctx_tok = qctx.__enter__()
+        del ctx_tok
+        out, skip = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                               **lower_kwargs)
+        if skip:
+            rec.update(skipped=skip, ok=True)
+            return rec
+        lowered, meta = out
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        cfg = get_config(arch)
+        n_chips = math.prod(meta["mesh"].shape.values())
+        # FLOPs/bytes: unrolled depth-extrapolated analysis lowering (XLA
+        # counts while bodies once, so the scanned compiled module alone
+        # undercounts by ~n_groups x grad_accum).
+        flops, xla_bytes = analysis_flops_bytes(arch, shape_name, n_chips)
+        hbm = hbm_traffic_model(cfg, cell, meta["mesh"], meta["rules"],
+                                meta["grad_accum"])
+        rec["xla_bytes_accessed"] = xla_bytes     # reference only (pre-fusion)
+        hlo_text = compiled.as_text()
+        coll = parse_collective_bytes(hlo_text)
+        upcast = f32_weight_upcast_bytes(hlo_text, cfg, meta["mesh"],
+                                         meta["rules"])
+        rl = Roofline(flops=flops, hbm_bytes=hbm,
+                      coll_bytes=float(coll["total_bytes"]),
+                      model_flops=model_flops_per_chip(
+                          cfg, cell, n_chips, meta["grad_accum"]))
+        rec.update(ok=True, grad_accum=meta["grad_accum"],
+                   memory=_memory_stats(compiled),
+                   collectives=coll, roofline=rl.as_dict())
+        peak = rec["memory"].get("peak_bytes")
+        if peak is not None:
+            upcast = min(upcast, rec["memory"].get("temp_bytes", 0))
+            rec["memory"]["f32_weight_upcast_bytes"] = float(upcast)
+            rec["memory"]["peak_tpu_estimate"] = peak - upcast
+            peak = peak - upcast
+        rec["fits_hbm"] = bool(peak is not None and peak <= HBM_PER_CHIP)
+        if verbose:
+            mem_gib = (peak or 0) / 2 ** 30
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK  "
+                  f"peak={mem_gib:.2f} GiB(tpu-est)  bound={rl.bound}  "
+                  f"compute={rl.compute_s*1e3:.2f}ms  "
+                  f"memory={rl.memory_s*1e3:.2f}ms  "
+                  f"coll={rl.collective_s*1e3:.2f}ms  "
+                  f"useful={rl.useful_ratio:.2f}")
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+                  f"FAIL {rec['error']}")
+    finally:
+        qctx.__exit__(None, None, None)
+        rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    args = ap.parse_args()
+
+    done: set[tuple[str, str, str]] = set()
+    if os.path.exists(args.out):                    # resume: skip OK cells
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if r.get("ok"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape, args.multi_pod))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    for arch, shape, mp in cells:
+        mesh_name = "2x16x16" if mp else "16x16"
+        if (arch, shape, mesh_name) in done:
+            print(f"[dryrun] {arch} x {shape} x {mesh_name}: cached OK")
+            continue
+        rec = run_cell(arch, shape, multi_pod=mp)
+        rec.pop("traceback", None) if rec.get("ok") else None
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

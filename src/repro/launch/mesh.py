@@ -1,0 +1,20 @@
+"""Production mesh construction (single-pod 16x16 and 2-pod 2x16x16).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh over local devices (tests / examples)."""
+    n = jax.device_count()
+    return jax.make_mesh((1, n), ("data", "model"))

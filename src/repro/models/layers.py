@@ -1,0 +1,245 @@
+"""Shared model building blocks: parameter specs, norms, projections, RoPE.
+
+Parameters are plain nested dicts of arrays.  ``ParamSpec`` leaves (shape,
+dtype, logical axes, init tag) are the single source of truth: the same spec
+tree materializes real arrays for tests or sharded ``ShapeDtypeStruct`` trees
+for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import named_sharding, shard
+
+bf16 = jnp.bfloat16
+f32 = jnp.float32
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    dtype: Any = bf16
+    axes: tuple[Optional[str], ...] = ()
+    init: str = "normal"        # normal | zeros | ones | a_log | dt_bias
+    scale: float = 1.0          # stddev multiplier for "normal"
+
+    def __iter__(self):         # (shape, dtype, axes) tuple-compat
+        return iter((self.shape, self.dtype, self.axes))
+
+
+def is_leaf(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, tree):
+    if isinstance(tree, ParamSpec):
+        return fn(tree)
+    if isinstance(tree, dict):
+        return {k: tree_map_specs(fn, v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(tree_map_specs(fn, v) for v in tree)
+    raise TypeError(type(tree))
+
+
+def stack_specs(tree, n: int):
+    """Prepend a scanned-layer dimension of size ``n`` to every leaf."""
+    return tree_map_specs(
+        lambda s: dataclasses.replace(
+            s, shape=(n,) + s.shape, axes=("layers",) + s.axes), tree)
+
+
+def _init_leaf(spec: ParamSpec, key) -> jax.Array:
+    # zeros/ones leaves are computed (not jnp constants) so every leaf is a
+    # DISTINCT device buffer: jax dedupes identical constant arrays, and a
+    # param tree with shared buffers cannot be donated to a train step.
+    if spec.init == "zeros":
+        return jnp.full(spec.shape, 0, spec.dtype) + jnp.zeros((), spec.dtype)
+    if spec.init == "ones":
+        return jnp.full(spec.shape, 1, spec.dtype) + jnp.zeros((), spec.dtype)
+    if spec.init == "a_log":    # mamba2: A in [1, 16], store log
+        u = jax.random.uniform(key, spec.shape, f32, 1.0, 16.0)
+        return jnp.log(u).astype(spec.dtype)
+    if spec.init == "dt_bias":  # mamba2: softplus^-1(dt), dt in [1e-3, 0.1]
+        dt = jnp.exp(jax.random.uniform(key, spec.shape, f32)
+                     * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(spec.dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, f32) * std).astype(spec.dtype)
+
+
+def materialize(specs, rng: Optional[jax.Array] = None, *, abstract=False,
+                mesh=None, rules=None):
+    """Specs -> real arrays (rng given) or ShapeDtypeStructs (abstract)."""
+    leaves = []
+    tree_map_specs(leaves.append, specs)
+    if abstract:
+        def mk(s: ParamSpec):
+            sh = (named_sharding(s.axes, s.shape, mesh, rules)
+                  if mesh is not None else None)
+            return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+        return tree_map_specs(mk, specs)
+    keys = iter(jax.random.split(rng, max(len(leaves), 1)))
+    return tree_map_specs(lambda s: _init_leaf(s, next(keys)), specs)
+
+
+def sharding_tree(specs, mesh, rules):
+    """NamedSharding tree matching a materialized param tree."""
+    return tree_map_specs(
+        lambda s: named_sharding(s.axes, s.shape, mesh, rules), specs)
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers (functional; params are dict slices)
+# ---------------------------------------------------------------------------
+
+
+import contextvars as _cv
+import contextlib as _cl
+
+# int8 weight quantization for serving (beyond-paper perf lever): projection
+# weights are stored int8 + per-output-channel scale; the dequant multiply
+# fuses into the MXU matmul on TPU, so HBM weight traffic halves.
+_QUANT = _cv.ContextVar("weight_quant", default=False)
+
+
+@_cl.contextmanager
+def weight_quant():
+    tok = _QUANT.set(True)
+    try:
+        yield
+    finally:
+        _QUANT.reset(tok)
+
+
+def dense_spec(d_in: int, d_out: int, axes, *, bias=False, dtype=bf16,
+               scale=1.0):
+    if _QUANT.get():
+        out = {"w": ParamSpec((d_in, d_out), jnp.int8, axes, init="zeros"),
+               "qscale": ParamSpec((d_out,), f32, (axes[-1],),
+                                   init="ones")}
+    else:
+        out = {"w": ParamSpec((d_in, d_out), dtype, axes, scale=scale)}
+    if bias:
+        out["b"] = ParamSpec((d_out,), dtype, (axes[-1],), init="zeros")
+    return out
+
+
+def dense(p, x: jax.Array) -> jax.Array:
+    w = p["w"]
+    if w.dtype == jnp.int8:
+        w = w.astype(x.dtype) * p["qscale"].astype(x.dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def norm_spec(d: int, axes=(None,)):
+    return {"scale": ParamSpec((d,), f32, axes, init="ones")}
+
+
+def rmsnorm(p, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(f32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["scale"]).astype(x.dtype)
+
+
+def act_fn(name: str, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x) if name == "gelu" else jax.nn.silu(x)
+
+
+def mlp_spec(cfg):
+    return {
+        "gate": dense_spec(cfg.d_model, cfg.d_ff, ("w_embed", "mlp")),
+        "up": dense_spec(cfg.d_model, cfg.d_ff, ("w_embed", "mlp")),
+        "down": dense_spec(cfg.d_ff, cfg.d_model, ("mlp", "w_embed")),
+    }
+
+
+def mlp(cfg, p, x: jax.Array) -> jax.Array:
+    h = act_fn(cfg.act, dense(p["gate"], x)) * dense(p["up"], x)
+    h = shard(h, "batch", "seq", "mlp")
+    return dense(p["down"], h)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=f32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: tuple[int, ...] = ()) -> jax.Array:
+    """x: (B, S, H, D).  positions: (B, S) or (3, B, S) for M-RoPE."""
+    d2 = x.shape[-1] // 2
+    freqs = _rope_freqs(x.shape[-1], theta)                    # (D/2,)
+    if mrope_sections:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        assert sum(mrope_sections) == d2
+        sec = []
+        start = 0
+        for i, n in enumerate(mrope_sections):
+            ang = positions[i][..., None].astype(f32) * freqs[start:start + n]
+            sec.append(ang)
+            start += n
+        angles = jnp.concatenate(sec, axis=-1)                 # (B, S, D/2)
+    else:
+        angles = positions[..., None].astype(f32) * freqs      # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :d2].astype(f32), x[..., d2:].astype(f32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Vocabulary padding + loss
+# ---------------------------------------------------------------------------
+
+VOCAB_PAD = 2048
+
+
+def padded_vocab(cfg) -> int:
+    v = cfg.vocab_size
+    if v % 16 == 0:          # evenly shardable over the 16-way "model" axis
+        return v
+    return ((v + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+
+def vocab_logit_bias(cfg) -> Optional[np.ndarray]:
+    """-inf bias on padded vocab entries (None when unpadded)."""
+    vp = padded_vocab(cfg)
+    if vp == cfg.vocab_size:
+        return None
+    bias = np.zeros((vp,), np.float32)
+    bias[cfg.vocab_size:] = -1e9
+    return bias
+
+
+def cross_entropy(cfg, logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL; logits (B, S, Vp) possibly vocab-padded/softcapped."""
+    logits = softcap(logits, cfg.final_logit_softcap).astype(f32)
+    bias = vocab_logit_bias(cfg)
+    if bias is not None:
+        logits = logits + bias
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,205 @@
+"""Top-level model API: param/cache specs, init, and the three entry points
+(train forward, prefill, decode step) for every assigned architecture.
+
+Params and caches are plain nested dicts; specs (``ParamSpec`` trees) are the
+single source of truth, materialized as real arrays (tests, examples) or as
+sharded ``ShapeDtypeStruct`` trees (multi-pod dry-run — no allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+from repro.models.layers import materialize, sharding_tree
+from repro.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Specs / init
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig):
+    specs: dict[str, Any] = {"embed": transformer.embed_specs(cfg)}
+    if cfg.family == "audio":
+        specs["encoder"] = encdec.encoder_specs(cfg)
+        specs["decoder"] = encdec.decoder_specs(cfg)
+    else:
+        specs["decoder"] = transformer.decoder_specs(cfg)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    if cfg.family == "audio":
+        return encdec.dec_cache_specs(cfg, batch, cache_len)
+    return transformer.decoder_cache_specs(cfg, batch, cache_len)
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array):
+    return materialize(param_specs(cfg), rng)
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                rng: Optional[jax.Array] = None):
+    import jax.random as jr
+    return materialize(cache_specs(cfg, batch, cache_len),
+                       rng if rng is not None else jr.PRNGKey(0))
+
+
+def abstract_params(cfg: ModelConfig, mesh=None, rules=None):
+    return materialize(param_specs(cfg), abstract=True, mesh=mesh,
+                       rules=rules)
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, cache_len: int, mesh=None,
+                    rules=None):
+    return materialize(cache_specs(cfg, batch, cache_len), abstract=True,
+                       mesh=mesh, rules=rules)
+
+
+def param_shardings(cfg: ModelConfig, mesh, rules):
+    return sharding_tree(param_specs(cfg), mesh, rules)
+
+
+def cache_shardings(cfg: ModelConfig, batch: int, cache_len: int, mesh,
+                    rules):
+    return sharding_tree(cache_specs(cfg, batch, cache_len), mesh, rules)
+
+
+# ---------------------------------------------------------------------------
+# Row-wise cache utilities (the batch/partition axis is 1 inside scanned
+# group stacks — leading axis is n_groups — and 0 in unscanned tail blocks)
+# ---------------------------------------------------------------------------
+
+
+def cache_axis_map(caches, fn):
+    """Apply fn(leaf, batch_axis) across a cache tree."""
+    out = {}
+    for key, sub in caches.items():
+        ax = 0 if key == "tail" else 1          # groups/blocks are stacked
+        out[key] = jax.tree.map(lambda x, _ax=ax: fn(x, _ax), sub)
+    return out
+
+
+def cache_slice_rows(caches, rows: int):
+    return cache_axis_map(
+        caches, lambda x, ax: jax.lax.slice_in_dim(x, 0, rows, axis=ax))
+
+
+def cache_grow_rows(caches, rows: int):
+    def g(x, ax):
+        pad = [(0, 0)] * x.ndim
+        pad[ax] = (0, rows - x.shape[ax])
+        return jnp.pad(x, pad)
+    return cache_axis_map(caches, g)
+
+
+def cache_num_rows(caches) -> int:
+    for key, sub in caches.items():
+        for leaf in jax.tree.leaves(sub):
+            return leaf.shape[0 if key == "tail" else 1]
+    raise ValueError("empty cache tree")
+
+
+def cache_write_row(caches, row_caches, row: int):
+    """Scatter a single-request cache (batch==1) into arena row ``row``."""
+    out = {}
+    for key, sub in caches.items():
+        if key == "tail":
+            out[key] = jax.tree.map(lambda c, r: c.at[row].set(r[0]),
+                                    sub, row_caches[key])
+        else:
+            out[key] = jax.tree.map(lambda c, r: c.at[:, row].set(r[:, 0]),
+                                    sub, row_caches[key])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+
+def _train_positions(cfg, batch: int, seq: int):
+    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+    if cfg.mrope_sections:
+        pos = jnp.broadcast_to(pos, (3, batch, seq))
+    return pos
+
+
+def _decode_positions(cfg, positions):
+    """(B,) host-tracked global positions -> model positions."""
+    if cfg.mrope_sections and positions.ndim == 1:
+        return jnp.broadcast_to(positions, (3,) + positions.shape)
+    return positions
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def forward_train(cfg: ModelConfig, params, batch: dict, *,
+                  remat: bool = True):
+    """batch: tokens (B,S) [+ vision_embeds (B,N,D) | frames (B,src,D)].
+    Returns logits (B,S,Vp)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    pos = batch.get("positions")
+    if pos is None:
+        pos = _train_positions(cfg, b, s)
+    x = transformer.embed_tokens(cfg, params["embed"], tokens,
+                                 batch.get("vision_embeds"))
+    if cfg.family == "audio":
+        enc_out = encdec.run_encoder(cfg, params["encoder"], batch["frames"])
+        x, _ = encdec.run_decoder(cfg, params["decoder"], x, mode="train",
+                                  positions=pos, enc_out=enc_out, remat=remat)
+    else:
+        x, _ = transformer.run_decoder(cfg, params["decoder"], x,
+                                       mode="train", positions=pos,
+                                       remat=remat)
+    return transformer.lm_logits(cfg, params["embed"], x)
+
+
+def prefill(cfg: ModelConfig, params, batch: dict, caches):
+    """Fill caches from a prompt; returns (last-token logits (B,Vp), caches).
+    All rows prefill from position 0 (scheduler admits fresh partitions)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    pos = batch.get("positions")
+    if pos is None:
+        pos = _train_positions(cfg, b, s)
+    x = transformer.embed_tokens(cfg, params["embed"], tokens,
+                                 batch.get("vision_embeds"))
+    if cfg.family == "audio":
+        enc_out = encdec.run_encoder(cfg, params["encoder"], batch["frames"])
+        x, new_caches = encdec.run_decoder(cfg, params["decoder"], x,
+                                           mode="prefill", caches=caches,
+                                           positions=pos, enc_out=enc_out)
+    else:
+        x, new_caches = transformer.run_decoder(cfg, params["decoder"], x,
+                                                mode="prefill", caches=caches,
+                                                positions=pos)
+    logits = transformer.lm_logits(cfg, params["embed"], x[:, -1:])
+    return logits[:, 0], new_caches
+
+
+def decode_step(cfg: ModelConfig, params, tokens, positions, caches):
+    """One decode step.  tokens (B,1) int32; positions (B,) global position
+    of the new token per row (continuous batching: rows are independent).
+    Returns (logits (B,Vp), new caches)."""
+    pos = _decode_positions(cfg, positions)
+    x = transformer.embed_tokens(cfg, params["embed"], tokens)
+    if cfg.family == "audio":
+        x, new_caches = encdec.run_decoder(cfg, params["decoder"], x,
+                                           mode="decode", caches=caches,
+                                           positions=pos)
+    else:
+        x, new_caches = transformer.run_decoder(cfg, params["decoder"], x,
+                                                mode="decode", caches=caches,
+                                                positions=pos)
+    logits = transformer.lm_logits(cfg, params["embed"], x)
+    return logits[:, 0], new_caches

@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).  [arXiv:2402.19427]
+
+Block: gated dual-branch — y = GeLU(W_y u); x = RG-LRU(conv4(W_x u));
+out = W_o (x * y).  The RG-LRU diagonal recurrence
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(L) * r_t),  c = 8,
+runs as an associative scan over the sequence (log-depth on TPU) and as a
+single step in decode.  Gates use block-diagonal weights (num_heads blocks)
+as in Griffin.  Per-request decode state = {h + conv tail}: O(1) in context.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, dense, dense_spec, f32
+from repro.sharding import shard
+
+LRU_C = 8.0
+
+
+def rglru_spec(cfg):
+    d, w = cfg.d_model, cfg.lru_width
+    nb = cfg.num_heads                       # gate blocks
+    bs = w // nb
+    cw = 4                                   # temporal conv width
+    return {
+        "y": dense_spec(d, w, ("w_embed", "lru")),
+        "x": dense_spec(d, w, ("w_embed", "lru")),
+        "conv": {"w": ParamSpec((cw, w), axes=(None, "lru"), scale=0.3),
+                 "b": ParamSpec((w,), axes=("lru",), init="zeros")},
+        "gate_i": {"w": ParamSpec((nb, bs, bs), axes=("heads", None, None)),
+                   "b": ParamSpec((nb, bs), axes=("heads", None),
+                                  init="zeros")},
+        "gate_r": {"w": ParamSpec((nb, bs, bs), axes=("heads", None, None)),
+                   "b": ParamSpec((nb, bs), axes=("heads", None),
+                                  init="zeros")},
+        "lam": ParamSpec((w,), f32, ("lru",), init="ones"),
+        "out": dense_spec(w, d, ("lru", "w_embed")),
+    }
+
+
+def _conv(p, x):
+    w = p["w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    s = x.shape[1]
+    return sum(xp[:, i:i + s] * p["w"][i] for i in range(w)) + p["b"]
+
+
+def _gates(p, x, nb):
+    """Block-diagonal sigmoid gates; x (..., W) -> (r, i) each (..., W)."""
+    bs = x.shape[-1] // nb
+    xb = x.reshape(x.shape[:-1] + (nb, bs)).astype(f32)
+    r = jax.nn.sigmoid(jnp.einsum("...hi,hio->...ho", xb, p["gate_r"]["w"])
+                       + p["gate_r"]["b"])
+    i = jax.nn.sigmoid(jnp.einsum("...hi,hio->...ho", xb, p["gate_i"]["w"])
+                       + p["gate_i"]["b"])
+    flat = x.shape[:-1] + (nb * bs,)
+    return r.reshape(flat), i.reshape(flat)
+
+
+def _lru_coeffs(p, x, nb):
+    r, i = _gates(p, x, nb)
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r        # (..., W), <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * x.astype(f32))
+    return a, b
+
+
+def rglru_block(cfg, p, u, *, mode: str, cache=None):
+    """u (B,S,D) -> (y, new_cache)."""
+    b, s, _ = u.shape
+    nb = cfg.num_heads
+    gate = jax.nn.gelu(dense(p["y"], u))
+    x = dense(p["x"], u)
+
+    if mode in ("train", "prefill"):
+        xc = _conv(p["conv"], x)
+        xc = shard(xc, "batch", "seq", "lru")
+        a, bb = _lru_coeffs(p, xc, nb)                     # (B,S,W) f32
+        # h_t = a_t h_{t-1} + b_t  via associative scan over S
+        aa, hh = jax.lax.associative_scan(
+            lambda l, r: (l[0] * r[0], l[1] * r[0] + r[1]), (a, bb), axis=1)
+        h = hh
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"state": h[:, -1].astype(jnp.bfloat16),
+                         "conv": x[:, -(p["conv"]["w"].shape[0] - 1):]}
+    else:
+        w = p["conv"]["w"].shape[0]
+        full = jnp.concatenate([cache["conv"], x[:, 0:1]], axis=1)  # (B,w,W)
+        xc = jnp.einsum("bwc,wc->bc", full, p["conv"]["w"]) + p["conv"]["b"]
+        a, bb = _lru_coeffs(p, xc, nb)                     # (B,W)
+        h1 = a * cache["state"].astype(f32) + bb
+        h = h1[:, None]
+        new_cache = {"state": h1.astype(jnp.bfloat16), "conv": full[:, 1:]}
+
+    y = h.astype(u.dtype) * gate
+    return dense(p["out"], y), new_cache
+
+
+def make_rglru_cache_spec(cfg, batch: int):
+    from repro.models.layers import bf16
+    return {
+        "state": ParamSpec((batch, cfg.lru_width), bf16, ("batch", "lru"),
+                           init="zeros"),
+        "conv": ParamSpec((batch, 3, cfg.lru_width), bf16,
+                          ("batch", None, "lru"), init="zeros"),
+    }

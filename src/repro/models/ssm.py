@@ -1,0 +1,186 @@
+"""Mamba2 / SSD (state-space duality) block.  [arXiv:2405.21060]
+
+Train/prefill use the chunked SSD algorithm: quadratic attention-like math
+within chunks of ``ssm_chunk`` tokens, a lax.scan state recurrence across
+chunks — O(S * L) compute, O(1)-in-S decode state.  Decode is the plain
+diagonal recurrence h = h * exp(dt*A) + dt * (B (x) x).
+
+Projections are kept separate (z/x/B/C/dt) instead of mamba2's fused
+``in_proj`` so tensor-parallel sharding stays segment-aligned; FLOPs are
+identical.  Per-request decode state = {ssm state + conv tail}: constant
+size, the best case for HotMem partitions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (ParamSpec, dense, dense_spec, f32, norm_spec,
+                                 rmsnorm)
+from repro.sharding import shard
+
+
+def ssm_spec(cfg):
+    d, di = cfg.d_model, cfg.d_inner
+    g, ds, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    w = cfg.ssm_conv_width
+    return {
+        "z": dense_spec(d, di, ("w_embed", "ssm_inner")),
+        "x": dense_spec(d, di, ("w_embed", "ssm_inner")),
+        "B": dense_spec(d, g * ds, ("w_embed", None)),
+        "C": dense_spec(d, g * ds, ("w_embed", None)),
+        "dt": dense_spec(d, h, ("w_embed", "ssm_heads")),
+        "conv_x": {"w": ParamSpec((w, di), axes=(None, "ssm_inner"),
+                                  scale=0.3),
+                   "b": ParamSpec((di,), axes=("ssm_inner",), init="zeros")},
+        "conv_B": {"w": ParamSpec((w, g * ds), axes=(None, None), scale=0.3),
+                   "b": ParamSpec((g * ds,), axes=(None,), init="zeros")},
+        "conv_C": {"w": ParamSpec((w, g * ds), axes=(None, None), scale=0.3),
+                   "b": ParamSpec((g * ds,), axes=(None,), init="zeros")},
+        "A_log": ParamSpec((h,), f32, ("ssm_heads",), init="a_log"),
+        "D": ParamSpec((h,), f32, ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((h,), f32, ("ssm_heads",), init="dt_bias"),
+        "norm": norm_spec(di, ("ssm_inner",)),
+        "out": dense_spec(di, d, ("ssm_inner", "w_embed")),
+    }
+
+
+def _causal_conv(p, x):
+    """Depthwise causal conv via shifted adds; x (B,S,C)."""
+    w = p["w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    s = x.shape[1]
+    y = sum(xp[:, i:i + s] * p["w"][i] for i in range(w))
+    return jax.nn.silu(y + p["b"])
+
+
+def _conv_step(p, hist, xt):
+    """One-token conv; hist (B, w-1, C), xt (B, C) -> (y, new_hist)."""
+    w = p["w"].shape[0]
+    full = jnp.concatenate([hist, xt[:, None]], axis=1)     # (B, w, C)
+    y = jax.nn.silu(jnp.einsum("bwc,wc->bc", full, p["w"]) + p["b"])
+    return y, full[:, -(w - 1):]
+
+
+def _broadcast_groups(bc, h):
+    """(B,...,G,ds) -> (B,...,H,ds)."""
+    g = bc.shape[-2]
+    return jnp.repeat(bc, h // g, axis=-2)
+
+
+def ssd_chunked(x, dt, A, B, C, h0):
+    """Chunked SSD.  x (B,S,H,P), dt (B,S,H), A (H,), B/C (B,S,H,N),
+    h0 (B,H,P,N) initial state.  Returns (y (B,S,H,P), h_final)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    l = min(256, s)
+    assert s % l == 0
+    nc = s // l
+    xr = x.reshape(b, nc, l, h, p)
+    dtr = dt.reshape(b, nc, l, h)
+    Br = B.reshape(b, nc, l, h, n)
+    Cr = C.reshape(b, nc, l, h, n)
+
+    da = dtr * A                                            # (B,nc,L,H) <= 0
+    da_cs = jnp.cumsum(da, axis=2)                          # inclusive cumsum
+    da_total = da_cs[:, :, -1]                              # (B,nc,H)
+
+    # intra-chunk (quadratic within chunk)
+    seg = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]   # (B,nc,Li,Lj,H)
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bclhn,bcmhn->bclmh", Cr, Br,
+                        preferred_element_type=f32)
+    y_intra = jnp.einsum("bclmh,bclmh,bcmh,bcmhp->bclhp",
+                         scores, decay, dtr, xr.astype(f32))
+
+    # chunk states + cross-chunk recurrence
+    decay_to_end = jnp.exp(da_total[:, :, None, :] - da_cs)    # (B,nc,L,H)
+    states = jnp.einsum("bclh,bclh,bclhn,bclhp->bchpn",
+                        decay_to_end, dtr, Br, xr.astype(f32))
+
+    def step(h_prev, inp):
+        st, tot = inp                                       # (B,H,P,N),(B,H)
+        h_new = h_prev * jnp.exp(tot)[:, :, None, None] + st
+        return h_new, h_prev
+
+    sc = jnp.moveaxis(states, 1, 0)
+    tc = jnp.moveaxis(da_total, 1, 0)
+    h_final, h_prevs = jax.lax.scan(step, h0.astype(f32), (sc, tc))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                   # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bclh,bclhn,bchpn->bclhp",
+                         jnp.exp(da_cs), Cr, h_prevs)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), h_final
+
+
+def ssm_block(cfg, p, u, *, mode: str, cache=None):
+    """u (B,S,D) -> (y, new_cache)."""
+    b, s, _ = u.shape
+    h, hd = cfg.ssm_nheads, cfg.ssm_headdim
+    g, ds = cfg.ssm_ngroups, cfg.ssm_state
+    A = -jnp.exp(p["A_log"].astype(f32))
+
+    z = dense(p["z"], u)
+    xr = dense(p["x"], u)
+    Br = dense(p["B"], u)
+    Cr = dense(p["C"], u)
+    dt_raw = dense(p["dt"], u)
+
+    if mode in ("train", "prefill"):
+        xc = _causal_conv(p["conv_x"], xr)
+        Bc = _causal_conv(p["conv_B"], Br)
+        Cc = _causal_conv(p["conv_C"], Cr)
+        dt = jax.nn.softplus(dt_raw.astype(f32) + p["dt_bias"])
+        xh = shard(xc.reshape(b, s, h, hd), "batch", "seq", "ssm_heads", None)
+        Bh = _broadcast_groups(Bc.reshape(b, s, g, ds), h)
+        Ch = _broadcast_groups(Cc.reshape(b, s, g, ds), h)
+        h0 = jnp.zeros((b, h, hd, ds), f32)
+        y, h_final = ssd_chunked(xh, dt, A, Bh, Ch, h0)
+        y = y + xh.astype(f32) * p["D"][None, None, :, None]
+        new_cache = None
+        if mode == "prefill":
+            w = cfg.ssm_conv_width
+            new_cache = {
+                "state": h_final.astype(jnp.bfloat16),
+                "conv_x": xr[:, -(w - 1):],
+                "conv_B": Br[:, -(w - 1):],
+                "conv_C": Cr[:, -(w - 1):],
+            }
+    else:  # decode: single-token recurrence
+        xc, hx = _conv_step(p["conv_x"], cache["conv_x"], xr[:, 0])
+        Bc, hB = _conv_step(p["conv_B"], cache["conv_B"], Br[:, 0])
+        Cc, hC = _conv_step(p["conv_C"], cache["conv_C"], Cr[:, 0])
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(f32) + p["dt_bias"])  # (B,H)
+        xh = xc.reshape(b, h, hd)
+        Bh = _broadcast_groups(Bc.reshape(b, g, ds), h)
+        Ch = _broadcast_groups(Cc.reshape(b, g, ds), h)
+        hs = cache["state"].astype(f32)                     # (B,H,P,N)
+        hs = hs * jnp.exp(dt * A)[:, :, None, None] \
+            + jnp.einsum("bh,bhn,bhp->bhpn", dt, Bh, xh.astype(f32))
+        y = jnp.einsum("bhn,bhpn->bhp", Ch, hs)
+        y = y + xh.astype(f32) * p["D"][None, :, None]
+        y = y[:, None]                                      # (B,1,H,P)
+        new_cache = {"state": hs.astype(jnp.bfloat16),
+                     "conv_x": hx, "conv_B": hB, "conv_C": hC}
+
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rmsnorm(p["norm"], y.astype(u.dtype) * jax.nn.silu(z), cfg.norm_eps)
+    return dense(p["out"], y), new_cache
+
+
+def make_ssm_cache_spec(cfg, batch: int):
+    h, hd, ds = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    g, w = cfg.ssm_ngroups, cfg.ssm_conv_width
+    from repro.models.layers import bf16
+    return {
+        "state": ParamSpec((batch, h, hd, ds), bf16,
+                           ("batch", "ssm_heads", None, None), init="zeros"),
+        "conv_x": ParamSpec((batch, w - 1, cfg.d_inner), bf16,
+                            ("batch", None, "ssm_inner"), init="zeros"),
+        "conv_B": ParamSpec((batch, w - 1, g * ds), bf16,
+                            ("batch", None, None), init="zeros"),
+        "conv_C": ParamSpec((batch, w - 1, g * ds), bf16,
+                            ("batch", None, None), init="zeros"),
+    }

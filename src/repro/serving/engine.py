@@ -1,0 +1,375 @@
+"""Elastic serving engine: the FaaS-runtime analogue of paper §4.1.
+
+One engine = one replica (VM).  Requests (function invocations) are admitted
+into arena partitions, prefilled (cold start), batch-decoded (continuous
+batching), kept warm for ``keep_alive`` (idle container pool), recycled, and
+the arena is resized up/down a bucket ladder as demand moves (plug/unplug).
+
+Timebase: a *virtual clock* advanced by the measured wall time of every
+device operation (prefill, decode step, migration, zero-fill).  Arrivals are
+virtual-time stamped, so trace-driven benchmarks measure real relative costs
+(reclaim vs decode interference) without running 300 wall-clock seconds.
+
+Modes (paper Fig. 8/9/10):
+  hotmem  — partition arena; shrink is metadata + prefix slice.
+  vanilla — same compute, but a physical paged twin of the KV leaves is
+            maintained; shrink must first run real migration copies.
+  static  — statically over-provisioned (never resizes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.arena import ArenaSpec
+from repro.core.elastic import ElasticArena, bucket_ladder, target_bucket
+from repro.models import model as M
+from repro.serving.request import Request, State
+
+i32 = jnp.int32
+
+
+@dataclasses.dataclass
+class StepEvent:
+    t: float                 # virtual time at start
+    kind: str                # decode | prefill | plug | unplug
+    wall_s: float
+    detail: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, spec: ArenaSpec, *,
+                 mode: str = "hotmem", keep_alive: float = 10.0,
+                 headroom: int = 1, seed: int = 0, prewarm: bool = True):
+        assert mode in ("hotmem", "vanilla", "static")
+        if mode == "vanilla":
+            assert cfg.family not in ("ssm", "hybrid"), \
+                "paged baseline mirrors token-extensive KV only"
+        self.cfg = cfg
+        self.params = params
+        self.spec = spec
+        self.mode = mode
+        self.keep_alive = keep_alive
+        self.headroom = headroom
+        self.ladder = bucket_ladder(spec.n_partitions,
+                                    min_units=min(2, spec.n_partitions))
+        start = spec.n_partitions if mode == "static" else self.ladder[0]
+        # vanilla's model-facing row view stays full-size (compute reads
+        # through block tables conceptually); its *physical* pool resizes
+        rows = spec.n_partitions if mode in ("static", "vanilla") else start
+        self.caches = M.init_caches(cfg, rows, spec.partition_tokens)
+        # physical paged twin of token-extensive KV leaves (vanilla only);
+        # for hotmem/static the arena is metadata-only and the engine owns
+        # the device tree (one copy, donated through the decode step)
+        self.pool = self._make_pool(start) if mode == "vanilla" else None
+        self.arena = ElasticArena(cfg, spec, mode, caches=self.pool,
+                                  seed=seed)
+        if mode != "vanilla":
+            # managers sized in partitions; ladder starts small
+            self.arena.manager.plugged = start
+            import heapq
+            self.arena.manager._free = list(range(start))
+            heapq.heapify(self.arena.manager._free)
+        else:
+            bpp = spec.blocks_per_partition
+            self.arena.manager.pool_blocks = start * bpp
+            self.arena.manager._free = list(range(start * bpp))
+            self.arena.manager._rng.shuffle(self.arena.manager._free)
+
+        self.now = 0.0
+        self.pending: deque[Request] = deque()
+        self.active: dict[str, Request] = {}
+        self.warm: dict[str, list[tuple[float, str, int]]] = {}
+        self.done: list[Request] = []
+        self.events: list[StepEvent] = []
+        self._row_req: dict[int, Request] = {}
+        self._decode_jit: dict[int, Any] = {}       # rows -> compiled step
+        self._prefill_jit: dict[int, Any] = {}      # prompt len -> compiled
+        if prewarm and mode == "hotmem":
+            # AOT bucket ladder (DESIGN.md §5.3): precompile the decode
+            # executable for every arena size so bucket switches are
+            # metadata + slice, never a recompile
+            for rows_n in self.ladder:
+                self._warm_decode(rows_n)
+
+    def _warm_decode(self, rows_n: int) -> None:
+        if rows_n in self._decode_jit:
+            return
+        self._decode_jit[rows_n] = jax.jit(
+            lambda p, t, po, c: M.decode_step(self.cfg, p, t, po, c),
+            donate_argnums=(3,))
+        caches = M.init_caches(self.cfg, rows_n, self.spec.partition_tokens)
+        toks = jnp.zeros((rows_n, 1), i32)
+        pos = jnp.zeros((rows_n,), i32)
+        out, _ = self._decode_jit[rows_n](self.params, toks, pos, caches)
+        jax.block_until_ready(out)
+
+    # ------------------------------------------------------------ plumbing
+    def _make_pool(self, parts: int):
+        """Physical paged twin: every token-extensive leaf becomes a flat
+        (NB, block_tokens, ...) block pool — one manager block id maps to
+        the same token range across all layers, exactly the paper's
+        whole-memory-block semantics.  Non-token leaves are skipped."""
+        bt = self.spec.block_tokens
+        t_part = self.spec.partition_tokens
+        pools = []
+
+        def to_pool(x, ax):
+            tok_ax = ax + 1
+            if x.ndim <= tok_ax or x.shape[tok_ax] != t_part:
+                return
+            if ax == 1:                       # (G, B, T, ...) -> (B, T, G...)
+                x = jnp.moveaxis(x, 0, 2)[ :parts]
+            else:
+                x = x[:parts]
+            nb = parts * (t_part // bt)
+            pools.append(x.reshape((nb, bt) + x.shape[2:]))
+
+        M.cache_axis_map(self.caches, to_pool)
+        return pools or None
+
+    def _rows(self) -> int:
+        return M.cache_num_rows(self.caches)
+
+    def _units(self) -> int:
+        return self.arena.units() if self.mode != "vanilla" else \
+            self.arena.units() // self.spec.blocks_per_partition
+
+    # ------------------------------------------------------------- submit
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    # -------------------------------------------------------------- admit
+    def _try_admit(self) -> None:
+        still = deque()
+        while self.pending:
+            req = self.pending.popleft()
+            if req.submit_s > self.now:
+                still.append(req)
+                continue
+            warm = self.warm.get(req.profile.name)
+            if warm:
+                _, old_rid, row = warm.pop()
+                self._start_warm(req, old_rid, row)
+                continue
+            got = self.arena.admit(req.rid)
+            if got is None:
+                if self.mode == "vanilla":
+                    # paged admission is block-based; map to a virtual row
+                    still.append(req)
+                    continue
+                still.append(req)
+                continue
+            row = got if self.mode != "vanilla" else self._alloc_row(req)
+            if row is None:
+                still.append(req)
+                continue
+            self._start_cold(req, row)
+        self.pending = still
+
+    def _alloc_row(self, req) -> Optional[int]:
+        used = set(self._row_req)
+        for entries in self.warm.values():          # warm rows stay reserved
+            used.update(row for _, _, row in entries)
+        for r in range(self._rows()):
+            if r not in used:
+                return r
+        return None
+
+    def _start_cold(self, req: Request, row: int) -> None:
+        req.partition = row
+        req.admitted_s = self.now
+        req.state = State.PREFILL
+        prof = req.profile
+        prompt = np.full((1, prof.prompt_tokens),
+                         hash(prof.name) % 97 + 1, np.int32)
+        n = prof.prompt_tokens
+        if n not in self._prefill_jit:
+            def _pf(params, toks, row_caches):
+                return M.prefill(self.cfg, params, {"tokens": toks},
+                                 row_caches)[1]
+            self._prefill_jit[n] = jax.jit(_pf, donate_argnums=(2,))
+        t0 = time.perf_counter()
+        row_caches = M.init_caches(self.cfg, 1, self.spec.partition_tokens)
+        row_caches = self._prefill_jit[n](self.params, jnp.asarray(prompt),
+                                          row_caches)
+        self.caches = M.cache_write_row(self.caches, row_caches, row)
+        jax.block_until_ready(jax.tree.leaves(self.caches)[0])
+        wall = time.perf_counter() - t0
+        self.now += wall
+        self.events.append(StepEvent(self.now, "prefill", wall,
+                                     {"rid": req.rid}))
+        self.arena.on_tokens(req.rid, prof.prompt_tokens)
+        req.position = prof.prompt_tokens
+        req.target_tokens = prof.prompt_tokens + prof.decode_tokens
+        req.state = State.RUNNING
+        self._row_req[row] = req
+        self.active[req.rid] = req
+
+    def _start_warm(self, req: Request, old_rid: str, row: int) -> None:
+        """Warm start: prompt KV still resident in the partition — skip
+        prefill entirely (the paper's warm-container fast path).  The
+        partition is re-bound by metadata adoption, zero data movement."""
+        prof = req.profile
+        req.partition = row
+        req.admitted_s = self.now
+        self.arena.manager.adopt(old_rid, req.rid)
+        self.arena.on_tokens(req.rid, prof.prompt_tokens)
+        req.position = prof.prompt_tokens
+        req.target_tokens = prof.prompt_tokens + prof.decode_tokens
+        req.state = State.RUNNING
+        self._row_req[row] = req
+        self.active[req.rid] = req
+
+    # -------------------------------------------------------------- decode
+    def _decode(self) -> None:
+        rows = self._rows()
+        toks = np.zeros((rows, 1), np.int32)
+        pos = np.zeros((rows,), np.int32)
+        for row, req in self._row_req.items():
+            if row < rows:
+                pos[row] = req.position
+        self._warm_decode(rows) if rows not in self._decode_jit else None
+        t0 = time.perf_counter()
+        logits, self.caches = self._decode_jit[rows](
+            self.params, jnp.asarray(toks), jnp.asarray(pos), self.caches)
+        jax.block_until_ready(logits)
+        wall = time.perf_counter() - t0
+        self.now += wall
+        self.events.append(StepEvent(self.now, "decode", wall,
+                                     {"batch": len(self._row_req)}))
+        finished = []
+        for row, req in list(self._row_req.items()):
+            req.position += 1
+            if req.first_token_s is None:
+                req.first_token_s = self.now
+            if not self.arena.on_tokens(req.rid, 1):
+                req.state = State.KILLED
+                finished.append((row, req))
+                continue
+            if req.position >= req.target_tokens:
+                req.state = State.DONE
+                finished.append((row, req))
+        for row, req in finished:
+            req.done_s = self.now
+            self.done.append(req)
+            del self.active[req.rid]
+            del self._row_req[row]
+            if req.state is State.DONE:
+                # to warm pool: the partition STAYS BOUND (idle container)
+                # until keep-alive expiry recycles it
+                self.warm.setdefault(req.profile.name, []).append(
+                    (self.now, req.rid, row))
+            # KILLED was already force-released by the manager
+
+    # ------------------------------------------------------------- elastic
+    def _recycle_idle(self) -> None:
+        """Recycle idle containers past keep-alive: release their
+        partitions/blocks (this is what makes memory reclaimable)."""
+        for prof, entries in list(self.warm.items()):
+            fresh = []
+            for (t, rid, row) in entries:
+                if self.now - t < self.keep_alive:
+                    fresh.append((t, rid, row))
+                else:
+                    self.arena.finish(rid)
+            self.warm[prof] = fresh
+
+    def _resize(self) -> None:
+        if self.mode == "static":
+            return
+        demand = len(self.active) + sum(map(len, self.warm.values())) \
+            + len(self.pending) + self.headroom
+        tgt = target_bucket(self.ladder, max(demand, self.ladder[0]))
+        cur = self._units()
+        if tgt > cur:
+            k = tgt - cur
+            units = k if self.mode != "vanilla" else \
+                k * self.spec.blocks_per_partition
+            wall = self.arena.plug(units)
+            t0 = time.perf_counter()
+            self._sync_rows(self._units())
+            jax.block_until_ready(jax.tree.leaves(self.caches)[0])
+            wall += time.perf_counter() - t0
+            self.now += wall
+            self.events.append(StepEvent(self.now, "plug", wall,
+                                         {"units": units}))
+        elif tgt < cur:
+            k = cur - tgt
+            if self.mode == "hotmem" and \
+                    not self.arena.manager.shrink_plan(k):
+                return                       # nothing reclaimable yet
+            units = k if self.mode != "vanilla" else \
+                k * self.spec.blocks_per_partition
+            ev = self.arena.unplug(units)
+            t0 = time.perf_counter()
+            self._sync_rows(self._units())
+            jax.block_until_ready(jax.tree.leaves(self.caches)[0])
+            ev.wall_seconds += time.perf_counter() - t0
+            self.now += ev.wall_seconds
+            self.events.append(StepEvent(
+                self.now, "unplug", ev.wall_seconds,
+                {"reclaimed_bytes": ev.reclaimed_bytes,
+                 "migrated_bytes": ev.migrated_bytes}))
+
+    def _sync_rows(self, parts: int) -> None:
+        """Match the model-facing row cache to the arena partition count."""
+        if self.mode == "vanilla":
+            return
+        rows = self._rows()
+        if parts == rows:
+            return
+        if parts > rows:
+            self.caches = M.cache_grow_rows(self.caches, parts)
+        else:
+            self.caches = M.cache_slice_rows(self.caches, parts)
+
+    # ----------------------------------------------------------------- run
+    def run(self, requests: list[Request], max_virtual_s: float = 1e9):
+        todo = deque(sorted(requests, key=lambda r: r.submit_s))
+        while (todo or self.pending or self.active
+               or any(self.warm.values())) and self.now < max_virtual_s:
+            while todo and todo[0].submit_s <= self.now:
+                self.submit(todo.popleft())
+            if not self.active and not self.pending and todo:
+                self.now = max(self.now, todo[0].submit_s)
+                continue
+            self._try_admit()
+            if self._row_req:
+                self._decode()
+            elif self.pending:
+                # stuck in waitqueue: let time pass so warm rows expire /
+                # the next resize can plug (regardless of future arrivals)
+                self.now += 0.01
+            elif not todo and not self.pending and not self.active:
+                # drain: idle containers age out, triggering final unplugs
+                # (the paper's post-burst scale-down, Fig. 8)
+                self.now += self.keep_alive / 8
+            self._recycle_idle()
+            self._resize()
+        return self.metrics()
+
+    def metrics(self) -> dict[str, Any]:
+        lat = [r.latency for r in self.done
+               if r.latency is not None and r.state is State.DONE]
+        reclaims = self.arena.manager.reclaim_events
+        return {
+            "completed": sum(r.state is State.DONE for r in self.done),
+            "killed": sum(r.state is State.KILLED for r in self.done),
+            "latency_p50": float(np.percentile(lat, 50)) if lat else None,
+            "latency_p99": float(np.percentile(lat, 99)) if lat else None,
+            "reclaim_events": len(reclaims),
+            "reclaimed_bytes": sum(e.reclaimed_bytes for e in reclaims),
+            "migrated_bytes": sum(e.migrated_bytes for e in reclaims),
+            "reclaim_wall_s": sum(e.wall_seconds for e in reclaims),
+            "decode_steps": sum(1 for e in self.events
+                                if e.kind == "decode"),
+            "events": self.events,
+        }

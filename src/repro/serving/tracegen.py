@@ -1,0 +1,44 @@
+"""Bursty invocation traces (Azure Functions trace shape, synthesized).
+
+The paper drives its evaluation with Azure traces [Shahrad et al. 2020]:
+heavy initial bursts that spawn many instances, then an abrupt load drop
+that triggers recycling and VM shrinking.  ``bursty_trace`` reproduces that
+shape deterministically: Poisson base load overlaid with burst windows of
+``burst_x`` higher rate, then a quiet tail.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def bursty_trace(duration_s: float, base_rate: float, *, burst_x: float = 8.0,
+                 burst_at: tuple[float, ...] = (0.0,), burst_len: float = 5.0,
+                 quiet_after: float | None = None, seed: int = 0
+                 ) -> list[float]:
+    """Arrival times in [0, duration).  Rate = base_rate, x ``burst_x``
+    inside burst windows, ~0 after ``quiet_after`` (the drop that triggers
+    scale-down in the paper's Fig. 8)."""
+    rng = np.random.default_rng(seed)
+    out: list[float] = []
+    t = 0.0
+    while t < duration_s:
+        rate = base_rate
+        for b in burst_at:
+            if b <= t < b + burst_len:
+                rate = base_rate * burst_x
+        if quiet_after is not None and t >= quiet_after:
+            rate = base_rate * 0.02
+        t += float(rng.exponential(1.0 / max(rate, 1e-9)))
+        if t < duration_s:
+            out.append(t)
+    return out
+
+
+def assign_profiles(arrivals: list[float], profiles: dict, seed: int = 0):
+    """Randomly map arrivals to function profiles (weighted)."""
+    rng = np.random.default_rng(seed + 1)
+    names = list(profiles)
+    w = np.array([profiles[n].weight for n in names], float)
+    w /= w.sum()
+    picks = rng.choice(len(names), size=len(arrivals), p=w)
+    return [(t, profiles[names[i]]) for t, i in zip(arrivals, picks)]

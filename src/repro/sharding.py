@@ -1,0 +1,207 @@
+"""Logical-axis sharding: MaxText-style rules mapping logical tensor axes to
+mesh axes, with divisibility-aware fallbacks.
+
+Model code annotates tensors with *logical* axis names via ``shard(x, ...)``;
+the active :class:`ShardCtx` (mesh + rule table) decides the physical
+``PartitionSpec``.  With no active context (single-device smoke tests)
+``shard`` is a no-op, so the same model code runs everywhere.
+
+Fallback policy: a rule only applies if every mesh axis it names exists in
+the mesh.  If the dimension is not divisible by the mesh-axis product, the
+rule applies anyway (GSPMD pads) only for axes in ``PAD_OK`` — head/expert
+counts like 28 heads over a 16-way "model" axis, where padding (+14% FLOPs)
+beats losing tensor parallelism.  Everything else falls back to replication.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = dict[str, tuple[str, ...] | str | None]
+
+# Strict divisibility everywhere: NamedSharding rejects uneven dims for
+# input specs, and GSPMD's uneven-padding fallback for *constraints* causes
+# involuntary full rematerialization (replicate + repartition) of layer-
+# sized tensors — e.g. padding 4 kv heads to 16 swamped the collective
+# roofline term.  Head-count dims that don't divide the axis fall back to
+# replication; the projection *weights* still shard via their flattened
+# (heads*head_dim) dims, which are 128-multiples throughout the pool.
+PAD_OK: frozenset = frozenset()
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+TRAIN_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,             # activation d_model
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",        # overridden to None for moe_sharding="tp"
+    "expert_mlp": None,        # overridden to "model" for moe_sharding="tp"
+    "expert_cap": ("pod", "data"),
+    "vocab": "model",
+    "w_embed": ("pod", "data"),  # weight d_model dim: FSDP / ZeRO-3
+    "kv_seq": None,
+    "ssm_heads": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "lru": "model",
+    "layers": None,
+    "src": None,
+    # remat-saved scan boundaries; "model" for wide models shards the saved
+    # residual stream over seq (sequence-parallel checkpoint storage)
+    "seq_remat": None,
+}
+
+# Serving: weights TP-only (latency), caches sequence-sharded over "model"
+# (kv head counts rarely divide 16; sequence always does at 32k+).
+SERVE_RULES: Rules = dict(
+    TRAIN_RULES,
+    w_embed=None,
+    kv_seq="model",
+    kv_heads=None,           # cache kv-head dim replicated; seq carries TP
+)
+
+# Serving for models whose bf16 weights exceed ~8 GiB/chip at TP=16: 2D
+# tensor parallelism.  Weights shard d_model over "data" AND heads/ffn over
+# "model"; activations shard d_model over "data" too, so projections
+# contract over the sharded dim and pay a tiny per-token activation psum
+# instead of re-all-gathering GBs of weights every decode step.
+SERVE_BIG_RULES: Rules = dict(SERVE_RULES, w_embed=("pod", "data"))
+
+# long_500k context-parallel decode: batch==1, so the KV sequence takes both
+# axes (524288 / 256 = 2048 per chip).
+SERVE_CP_RULES: Rules = dict(SERVE_RULES, kv_seq=("data", "model"),
+                             batch=None)
+
+
+def serve_rules_for(cfg, shape_name: str) -> Rules:
+    rules = SERVE_RULES
+    if cfg.param_count() * 2 / 16 > 8 * 2 ** 30:  # >8 GiB bf16/chip at TP=16
+        rules = SERVE_BIG_RULES
+    if shape_name == "long_500k":
+        rules = dict(rules, kv_seq=("data", "model"), batch=None)
+    if cfg.moe_sharding == "tp":
+        rules = dict(rules, experts=None, expert_mlp="model")
+    return rules
+
+
+# Beyond-paper (hillclimbed): small models on a 256-chip pod should not pay
+# Megatron-TP activation all-reduces at all — pure data/FSDP parallelism
+# over every mesh axis moves only the (small) weights, not activations.
+DP_ONLY_TRAIN_RULES: Rules = dict(
+    TRAIN_RULES,
+    batch=("pod", "data", "model"),
+    heads=None, kv_heads=None, mlp=None, vocab=None,
+    experts=None, expert_mlp=None, expert_cap=("pod", "data", "model"),
+    ssm_heads=None, ssm_inner=None, lru=None,
+    w_embed=("pod", "data", "model"),
+)
+
+# bf16 weights per chip below which pure-FSDP beats TP on this pod
+_DP_ONLY_MAX_BYTES = 4 * 2 ** 30
+
+
+def train_rules_for(cfg, *, dp_only: bool | None = None) -> Rules:
+    if dp_only is None:
+        dp_only = cfg.param_count() * 2 <= _DP_ONLY_MAX_BYTES \
+            and cfg.num_experts == 0
+    if dp_only:
+        return DP_ONLY_TRAIN_RULES
+    rules = TRAIN_RULES
+    if cfg.moe_sharding == "tp":
+        rules = dict(rules, experts=None, expert_mlp="model")
+    if cfg.d_model >= 6144:
+        # wide models: saved scan boundaries alone exceed the activation
+        # budget at microbatch 1 — store them sequence-sharded over "model"
+        # (one (B,S,D) all-gather per group per pass buys back GBs of HBM)
+        rules = dict(rules, seq_remat="model")
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Context
+# ---------------------------------------------------------------------------
+
+
+class ShardCtx:
+    def __init__(self, mesh: Mesh, rules: Rules):
+        self.mesh = mesh
+        self.rules = rules
+
+    def axis_size(self, names: tuple[str, ...]) -> int:
+        return math.prod(self.mesh.shape.get(n, 1) for n in names)
+
+
+_CTX: contextvars.ContextVar[Optional[ShardCtx]] = contextvars.ContextVar(
+    "shard_ctx", default=None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Optional[Mesh], rules: Rules):
+    tok = _CTX.set(ShardCtx(mesh, rules) if mesh is not None else None)
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def current_ctx() -> Optional[ShardCtx]:
+    return _CTX.get()
+
+
+# ---------------------------------------------------------------------------
+# Spec construction
+# ---------------------------------------------------------------------------
+
+
+def spec_for(axes: tuple[Optional[str], ...], shape: tuple[int, ...],
+             ctx: ShardCtx) -> P:
+    assert len(axes) == len(shape), (axes, shape)
+    used: set[str] = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        entry = ctx.rules.get(name) if name else None
+        if entry is None:
+            parts.append(None)
+            continue
+        mesh_axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        mesh_axes = tuple(a for a in mesh_axes
+                          if a in ctx.mesh.shape and a not in used)
+        if not mesh_axes:
+            parts.append(None)
+            continue
+        n = ctx.axis_size(mesh_axes)
+        if dim % n != 0:
+            # try a prefix of the axes (e.g. batch over ("pod","data"))
+            while mesh_axes and dim % ctx.axis_size(mesh_axes) != 0:
+                mesh_axes = mesh_axes[:-1]
+            if not mesh_axes:
+                parts.append(None)
+                continue
+        used.update(mesh_axes)
+        parts.append(mesh_axes[0] if len(mesh_axes) == 1 else mesh_axes)
+    return P(*parts)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op w/o context)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec = spec_for(axes, x.shape, ctx)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def named_sharding(axes: tuple[Optional[str], ...], shape: tuple[int, ...],
+                   mesh: Mesh, rules: Rules) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(axes, shape, ShardCtx(mesh, rules)))

@@ -1,0 +1,115 @@
+"""Sharded, manifest-committed, async checkpointing with elastic reshard.
+
+Layout:  <dir>/step_<N>/  shard_<host>.npz  +  MANIFEST.json  (written last;
+a checkpoint without a manifest is incomplete and ignored by ``latest``).
+Writes go to ``step_<N>.tmp`` then atomically rename — a crash mid-save
+never corrupts the restore path (fault-tolerance contract: restart always
+finds the newest *complete* step).
+
+Restore is mesh-agnostic: arrays are loaded on host and ``device_put`` with
+the *target* shardings, so a checkpoint taken on mesh A restores onto mesh B
+(elastic rescale after losing/gaining pods).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in sorted(tree.items()):
+            yield from _flatten(v, f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+def _unflatten_into(template, flat: dict[str, np.ndarray], prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}/{k}")
+                for k, v in sorted(template.items())}
+    if isinstance(template, (list, tuple)):
+        return type(template)(
+            _unflatten_into(v, flat, f"{prefix}/{i}")
+            for i, v in enumerate(template))
+    return flat[prefix]
+
+
+def _encode(arr: np.ndarray) -> tuple[str, np.ndarray]:
+    """npz cannot store bfloat16 — view as uint16 with a key marker."""
+    if arr.dtype.itemsize == 2 and arr.dtype.kind == "V" or \
+            str(arr.dtype) == "bfloat16":
+        return "::bf16", arr.view(np.uint16)
+    return "", arr
+
+
+def _decode(key: str, arr: np.ndarray) -> tuple[str, np.ndarray]:
+    if key.endswith("::bf16"):
+        import ml_dtypes
+        return key[:-6], arr.view(ml_dtypes.bfloat16)
+    return key, arr
+
+
+def save(ckpt_dir: str, step: int, state, *, process_index: int = 0,
+         blocking: bool = True) -> threading.Thread:
+    """Write one host's shard + manifest; async when blocking=False."""
+    arrays = {}
+    for k, v in _flatten(state):
+        suffix, enc = _encode(np.asarray(v))
+        arrays[k + suffix] = enc
+
+    def _write():
+        tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, f"shard_{process_index}.npz"), **arrays)
+        manifest = {"step": step, "time": time.time(),
+                    "keys": sorted(arrays), "hosts": 1}
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)          # atomic commit
+
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    if blocking:
+        t.join()
+    return t
+
+
+def latest(ckpt_dir: str) -> Optional[int]:
+    """Newest *complete* (manifest-committed) step, or None."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp") and \
+                os.path.exists(os.path.join(ckpt_dir, name, "MANIFEST.json")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template, *,
+            shardings: Optional[Any] = None, process_index: int = 0):
+    """Load into the template's structure; reshard onto ``shardings`` (a
+    matching tree of NamedSharding) when given — elastic mesh changes."""
+    path = os.path.join(ckpt_dir, f"step_{step}",
+                        f"shard_{process_index}.npz")
+    with np.load(path) as z:
+        flat = dict(_decode(k, z[k]) for k in z.files)
+    state = _unflatten_into(template, flat)
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), state, shardings)
+    return state

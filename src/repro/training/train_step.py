@@ -1,0 +1,75 @@
+"""Train step: microbatched grad accumulation + AdamW, donation-friendly.
+
+``grad_accum`` splits the global batch into microbatches scanned on-device
+(fp32 grad accumulator), bounding saved-activation memory to one microbatch
+— the knob that keeps every assigned train_4k cell under 16 GiB/chip
+(verified by the dry-run's memory_analysis).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import cross_entropy, f32
+from repro.models.model import forward_train
+from repro.training.optimizer import AdamWConfig, apply_updates
+
+
+def _loss_fn(cfg, params, batch):
+    logits = forward_train(cfg, params, batch, remat=True)
+    return cross_entropy(cfg, logits, batch["labels"])
+
+
+def _split_micro(batch, accum: int):
+    """(B, ...) -> (A, B/A, ...) for every leaf."""
+    def sp(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape((accum, b // accum) + x.shape[1:])
+    # frames/vision leaves reshape on batch too; positions built inside
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(cfg, opt: Optional[AdamWConfig] = None,
+                    grad_accum: int = 1):
+    opt = opt or AdamWConfig()
+
+    def train_step(state: dict[str, Any], batch: dict[str, jax.Array]):
+        params = state["params"]
+
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: _loss_fn(cfg, p, batch))(params)
+        else:
+            micro = _split_micro(batch, grad_accum)
+
+            def acc_fn(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(
+                    lambda p: _loss_fn(cfg, p, mb))(params)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(f32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, f32), params)
+            (grads, loss), _ = jax.lax.scan(acc_fn, (g0, jnp.zeros((), f32)),
+                                            micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+
+        new_params, new_opt, metrics = apply_updates(
+            opt, params, grads, state["opt"])
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_batch_labels(tokens: jax.Array) -> dict[str, jax.Array]:
+    """Next-token prediction: labels are tokens shifted left."""
+    return {"tokens": tokens,
+            "labels": jnp.concatenate(
+                [tokens[:, 1:], tokens[:, :1]], axis=1)}

@@ -1,0 +1,15 @@
+import os
+import sys
+
+# tests see ONE device; the 512-device flag is dryrun.py-only by design
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,112 @@
+"""Property-based tests (hypothesis) on the managers' invariants — the
+paper's correctness core: partitions never double-booked, refcounts sound,
+HotMem reclaim never migrates, vanilla reclaim preserves every live block."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.arena import ArenaSpec
+from repro.core.hotmem import HotMemManager
+from repro.core.vanilla import VanillaPagedManager
+
+SPEC = ArenaSpec(partition_tokens=64, n_partitions=8, block_tokens=16,
+                 bytes_per_partition=1024)
+
+# op stream: (kind, arg)
+OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("reserve"), st.integers(0, 15)),
+        st.tuples(st.just("grow"), st.integers(0, 15)),
+        st.tuples(st.just("release"), st.integers(0, 15)),
+        st.tuples(st.just("fork"), st.integers(0, 15)),
+        st.tuples(st.just("plug"), st.integers(1, 4)),
+        st.tuples(st.just("unplug"), st.integers(1, 4)),
+    ),
+    min_size=1, max_size=60,
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(OPS)
+def test_hotmem_invariants(ops):
+    m = HotMemManager(SPEC, plugged=4)
+    live = set()
+    for kind, arg in ops:
+        rid = f"r{arg}"
+        if kind == "reserve" and rid not in live:
+            if m.reserve(rid) is not None:
+                live.add(rid)
+        elif kind == "grow" and rid in live:
+            if not m.grow(rid, 16):
+                live.discard(rid)           # killed
+        elif kind == "release" and rid in live:
+            m.release(rid, force=True)
+            live.discard(rid)
+        elif kind == "fork" and rid in live:
+            m.fork(rid)
+            m.release(rid)                  # net refcount unchanged
+        elif kind == "plug":
+            m.plug(arg)
+        elif kind == "unplug":
+            ev = m.unplug(arg)
+            assert ev.migrated_bytes == 0   # THE paper property
+            assert ev.migrated_blocks == 0
+        m.check_invariants()
+    assert m.live_partitions == len(live)
+
+
+@settings(max_examples=200, deadline=None)
+@given(OPS)
+def test_vanilla_invariants(ops):
+    m = VanillaPagedManager(SPEC, seed=1)
+    live = set()
+    for kind, arg in ops:
+        rid = f"r{arg}"
+        if kind == "reserve" and rid not in live:
+            if m.reserve(rid) is not None:
+                live.add(rid)
+        elif kind == "grow" and rid in live:
+            if m.grow(rid, 16) is None:
+                live.discard(rid)
+        elif kind == "release" and rid in live:
+            m.release(rid)
+            live.discard(rid)
+        elif kind == "unplug":
+            before = {r: list(m.block_table(r)) for r in live}
+            k, moves = m.shrink_plan(arg * SPEC.blocks_per_partition)
+            ev = m.apply_shrink(k, moves)
+            # every live block survives (possibly remapped), none lost
+            for r in live:
+                assert len(m.block_table(r)) == len(before[r])
+            assert ev.migrated_blocks == len(moves)
+        elif kind == "plug":
+            m.plug(arg * SPEC.blocks_per_partition)
+        m.check_invariants()
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 8))
+def test_hotmem_unplug_only_free_suffix(n_live, k):
+    """Unplug must never touch a live partition (zero-migration is only
+    possible because shrink takes empty partitions exclusively)."""
+    m = HotMemManager(SPEC)
+    rids = [f"r{i}" for i in range(n_live)]
+    for r in rids:
+        m.reserve(r)
+    owned = {m.partition_of(r) for r in rids}
+    ev = m.unplug(k)
+    assert ev.reclaimed_units <= SPEC.n_partitions - n_live
+    for r in rids:
+        assert m.partition_of(r) in owned
+    m.check_invariants()
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(2, 8))
+def test_waitqueue_fifo_wakeup(n):
+    m = HotMemManager(SPEC, plugged=1)
+    assert m.reserve("holder") is not None
+    for i in range(n):
+        assert m.reserve(f"w{i}") is None
+    woken = m.release("holder")
+    assert woken == "w0"                    # FIFO
+    assert list(m.waitqueue) == [f"w{i}" for i in range(1, n)]

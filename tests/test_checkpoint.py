@@ -1,0 +1,68 @@
+"""Fault tolerance: atomic manifest commits, resume-after-crash continuity,
+elastic reshard-on-load."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.train import train
+from repro.training import checkpoint as ckpt
+
+
+def test_atomic_commit_ignores_partial(tmp_path):
+    d = str(tmp_path)
+    state = {"a": np.arange(4.0), "b": {"c": np.ones((2, 2))}}
+    ckpt.save(d, 10, state)
+    # a crashed save: directory without manifest
+    os.makedirs(os.path.join(d, "step_20"))
+    assert ckpt.latest(d) == 10
+    got = ckpt.restore(d, 10, state)
+    np.testing.assert_array_equal(got["a"], state["a"])
+    np.testing.assert_array_equal(got["b"]["c"], state["b"]["c"])
+
+
+def test_crash_resume_continuity(tmp_path):
+    """Train 12 steps with a crash at step 8; resume must complete and the
+    final state must equal an uninterrupted run (pure-function data
+    pipeline + step-indexed checkpoints)."""
+    d = str(tmp_path / "ck")
+    with pytest.raises(RuntimeError, match="injected failure"):
+        train("qwen2-1.5b", steps=12, batch=2, seq=16, ckpt_dir=d,
+              ckpt_every=4, fail_at_step=8, log_every=100)
+    # the async step-8 save may or may not have committed before the crash
+    # (both are legal); either way resume must reach the clean-run state
+    assert ckpt.latest(d) in (4, 8)
+    state_resumed, _ = train("qwen2-1.5b", steps=12, batch=2, seq=16,
+                             ckpt_dir=d, ckpt_every=4, resume=True,
+                             log_every=100)
+    state_clean, _ = train("qwen2-1.5b", steps=12, batch=2, seq=16,
+                           ckpt_dir=str(tmp_path / "clean"), ckpt_every=100,
+                           log_every=100)
+    for a, b in zip(jax.tree.leaves(state_resumed["params"]),
+                    jax.tree.leaves(state_clean["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-2, rtol=1e-2)
+
+
+def test_elastic_reshard_on_load(tmp_path):
+    """Restore with explicit target shardings (mesh-B placement for a
+    mesh-A checkpoint)."""
+    d = str(tmp_path)
+    state = {"w": np.arange(16.0).reshape(4, 4)}
+    ckpt.save(d, 1, state)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sh = {"w": NamedSharding(mesh, P("data", "model"))}
+    got = ckpt.restore(d, 1, state, shardings=sh)
+    assert got["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(got["w"]), state["w"])
+
+
+def test_async_save_overlaps(tmp_path):
+    d = str(tmp_path)
+    t = ckpt.save(d, 5, {"x": np.ones(8)}, blocking=False)
+    t.join()
+    assert ckpt.latest(d) == 5

@@ -1,0 +1,114 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(assigned deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.kv_compact import kv_compact
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.partition_attention import partition_attention
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+SHAPES = [  # (P, T, HKV, G, DH, block_t)
+    (2, 32, 1, 1, 16, 8),
+    (4, 64, 2, 3, 32, 16),
+    (3, 128, 4, 2, 64, 64),
+    (1, 256, 2, 7, 128, 128),
+]
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("window", [0, 24])
+def test_partition_attention_sweep(shape, dtype, window):
+    p, t, hkv, g, dh, bt = shape
+    rng = np.random.default_rng(hash((shape, window)) % 2 ** 31)
+    q = jnp.asarray(rng.normal(size=(p, hkv, g, dh)), dtype)
+    k = jnp.asarray(rng.normal(size=(p, t, hkv, dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(p, t, hkv, dh)), dtype)
+    pos = jnp.asarray(rng.integers(0, 3 * t, size=(p,)), jnp.int32)
+    out = partition_attention(q, k, v, pos, window=window, block_t=bt)
+    want = ref.partition_attention(q, k, v, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("cap", [0.0, 30.0])
+def test_partition_attention_softcap(dtype, cap):
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(2, 2, 2, 32)), dtype)
+    k = jnp.asarray(rng.normal(size=(2, 64, 2, 32)), dtype)
+    v = jnp.asarray(rng.normal(size=(2, 64, 2, 32)), dtype)
+    pos = jnp.asarray([10, 63], jnp.int32)
+    out = partition_attention(q, k, v, pos, logit_cap=cap, block_t=16)
+    want = ref.partition_attention(q, k, v, pos, logit_cap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("nb,bt,mb", [(8, 8, 4), (16, 16, 8), (32, 8, 6)])
+def test_paged_attention_sweep(dtype, nb, bt, mb):
+    p, hkv, g, dh = 3, 2, 2, 32
+    rng = np.random.default_rng(nb * bt)
+    q = jnp.asarray(rng.normal(size=(p, hkv, g, dh)), dtype)
+    kp = jnp.asarray(rng.normal(size=(nb, bt, hkv, dh)), dtype)
+    vp = jnp.asarray(rng.normal(size=(nb, bt, hkv, dh)), dtype)
+    tables = np.full((p, mb), -1, np.int32)
+    pos = np.zeros((p,), np.int32)
+    for i in range(p):
+        nblk = int(rng.integers(1, mb + 1))
+        tables[i, :nblk] = rng.choice(nb, size=nblk, replace=False)
+        pos[i] = nblk * bt - int(rng.integers(1, bt))
+    out = paged_attention(q, kp, vp, jnp.asarray(tables), jnp.asarray(pos))
+    want = ref.paged_attention(q, kp, vp, jnp.asarray(tables),
+                               jnp.asarray(pos))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES + [jnp.int32])
+@pytest.mark.parametrize("nb,bt,m", [(8, 4, 3), (16, 8, 8), (64, 16, 31)])
+def test_kv_compact_sweep(dtype, nb, bt, m):
+    rng = np.random.default_rng(nb + m)
+    if dtype == jnp.int32:
+        pool = jnp.asarray(rng.integers(0, 100, size=(nb, bt, 2, 8)), dtype)
+    else:
+        pool = jnp.asarray(rng.normal(size=(nb, bt, 2, 8)), dtype)
+    src = rng.choice(nb, size=m, replace=False)
+    dst = rng.choice(nb, size=m, replace=False)
+    src_j = jnp.asarray(src, jnp.int32)
+    dst_j = jnp.asarray(dst, jnp.int32)
+    got = kv_compact(pool, src_j, dst_j)
+    want = ref.kv_compact(pool, src_j, dst_j, m)
+    assert jnp.array_equal(got, want)
+
+
+def test_paged_equals_partition_when_contiguous():
+    """The two layouts must agree when the block table is the identity —
+    the kernel-level statement of 'same math, different placement'."""
+    rng = np.random.default_rng(0)
+    p, hkv, g, dh, bt, nblk = 2, 2, 2, 32, 16, 4
+    t = bt * nblk
+    q = jnp.asarray(rng.normal(size=(p, hkv, g, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(p, t, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(p, t, hkv, dh)), jnp.float32)
+    pos = jnp.asarray([t - 1, t // 2], jnp.int32)
+    part = partition_attention(q, k, v, pos, block_t=bt)
+    kp = k.reshape(p * nblk, bt, hkv, dh)
+    vp = v.reshape(p * nblk, bt, hkv, dh)
+    tables = jnp.asarray(
+        [[i * nblk + j for j in range(nblk)] for i in range(p)], jnp.int32)
+    paged = paged_attention(q, kp, vp, tables, pos)
+    np.testing.assert_allclose(np.asarray(part), np.asarray(paged),
+                               atol=1e-5, rtol=1e-5)

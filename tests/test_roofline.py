@@ -1,0 +1,48 @@
+"""Roofline machinery: while-aware collective parsing, term math."""
+from repro.roofline import (Roofline, parse_collective_bytes,
+                            PEAK_FLOPS, HBM_BW, LINK_BW)
+
+HLO = """
+HloModule test
+
+%body.1 (p: (s32[], bf16[4,8])) -> (s32[], bf16[4,8]) {
+  %ar = bf16[4,8]{1,0} all-reduce(bf16[4,8]{1,0} %x), replica_groups={}
+  %cp = bf16[4,8]{1,0} collective-permute(bf16[4,8]{1,0} %ar)
+}
+
+%cond.1 (p: (s32[], bf16[4,8])) -> pred[] {
+  %c = s32[] constant(10)
+}
+
+ENTRY %main (a: bf16[16,16]) -> bf16[16,16] {
+  %ag = bf16[16,16]{1,0} all-gather(bf16[1,16]{1,0} %a), dimensions={0}
+  %w = (s32[], bf16[4,8]) while(%t), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+}
+"""
+
+
+def test_while_multiplied_collectives():
+    out = parse_collective_bytes(HLO)
+    by = out["bytes_by_op"]
+    assert by["all-gather"] == 16 * 16 * 2            # result > operand
+    assert by["all-reduce"] == 10 * 4 * 8 * 2         # x trip count
+    assert by["collective-permute"] == 10 * 4 * 8 * 2
+    assert out["counts"]["all-reduce"] == 10
+
+
+def test_flat_module_without_entry():
+    out = parse_collective_bytes(
+        "%x = f32[8]{0} all-reduce(f32[8]{0} %y)")
+    assert out["bytes_by_op"]["all-reduce"] == 32
+
+
+def test_roofline_terms_and_bound():
+    rl = Roofline(flops=PEAK_FLOPS, hbm_bytes=HBM_BW * 2,
+                  coll_bytes=LINK_BW / 2, model_flops=PEAK_FLOPS / 2)
+    assert abs(rl.compute_s - 1.0) < 1e-9
+    assert abs(rl.memory_s - 2.0) < 1e-9
+    assert abs(rl.collective_s - 0.5) < 1e-9
+    assert rl.bound == "memory"
+    assert abs(rl.step_s - 2.0) < 1e-9
+    assert abs(rl.useful_ratio - 0.5) < 1e-9
+    assert abs(rl.roofline_fraction - 0.25) < 1e-9

@@ -1,0 +1,63 @@
+"""Straggler mitigation: hedged dispatch + supervised restart contracts."""
+import pytest
+
+from repro.launch.distributed import hedged_dispatch, run_with_restarts
+
+
+class FakeReplica:
+    def __init__(self, load, ttft):
+        self._load = load
+        self.ttft = ttft
+        self.submissions = 0
+
+    def load(self):
+        return self._load
+
+
+def test_hedge_picks_least_loaded_fast_replica():
+    reps = [FakeReplica(0.9, 0.01), FakeReplica(0.1, 0.01)]
+
+    def submit(i):
+        reps[i].submissions += 1
+        return reps[i].ttft
+
+    chosen = hedged_dispatch(reps, submit, deadline_s=0.1)
+    assert chosen == [1]                      # least loaded, fast enough
+    assert reps[1].submissions == 1
+    assert reps[0].submissions == 0
+
+
+def test_hedge_fires_backup_on_straggler():
+    reps = [FakeReplica(0.1, 5.0), FakeReplica(0.5, 0.01)]
+
+    def submit(i):
+        reps[i].submissions += 1
+        return reps[i].ttft
+
+    chosen = hedged_dispatch(reps, submit, deadline_s=0.1)
+    assert chosen == [0, 1]                   # straggler -> hedge
+    assert reps[0].submissions == 1
+    assert reps[1].submissions == 1
+
+
+def test_run_with_restarts_recovers(monkeypatch):
+    monkeypatch.setattr("time.sleep", lambda s: None)
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("preempted")
+
+    run_with_restarts(flaky, max_restarts=5, backoff_s=0.0)
+    assert calls["n"] == 3
+
+
+def test_run_with_restarts_bounded(monkeypatch):
+    monkeypatch.setattr("time.sleep", lambda s: None)
+
+    def always_fails():
+        raise RuntimeError("bad node")
+
+    with pytest.raises(RuntimeError, match="bad node"):
+        run_with_restarts(always_fails, max_restarts=2, backoff_s=0.0)

@@ -1,0 +1,74 @@
+"""Sharding rule-engine unit tests: divisibility fallbacks, axis-conflict
+avoidance, prefix fallback for multi-axis rules."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import (SERVE_RULES, TRAIN_RULES, ShardCtx, spec_for,
+                            serve_rules_for, train_rules_for)
+from repro.configs.base import get_config
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def _ctx(shape=None, rules=TRAIN_RULES):
+    return ShardCtx(FakeMesh(shape or {"data": 16, "model": 16}), rules)
+
+
+def test_even_division_shards():
+    spec = spec_for(("batch", "seq", "embed"), (256, 4096, 1024), _ctx())
+    assert spec == P("data", None, None)     # no 'pod' in mesh
+
+
+def test_uneven_head_count_replicates():
+    # 28 heads over 16-way model: strict divisibility -> replicated
+    spec = spec_for(("batch", "seq", "heads", None), (256, 128, 28, 128),
+                    _ctx())
+    assert spec[2] is None
+
+
+def test_multi_axis_prefix_fallback():
+    ctx = _ctx({"pod": 2, "data": 16, "model": 16})
+    # batch 32 divides pod*data=32 fully
+    assert spec_for(("batch",), (32,), ctx) == P(("pod", "data"))
+    # batch 2 only divides the 'pod' prefix
+    assert spec_for(("batch",), (2,), ctx) == P("pod")
+    # batch 1 divides nothing -> replicated
+    assert spec_for(("batch",), (1,), ctx) == P(None)
+
+
+def test_axis_used_once_per_tensor():
+    ctx = _ctx(rules=dict(TRAIN_RULES, embed=("data",)))
+    # batch consumes 'data'; embed must not reuse it
+    spec = spec_for(("batch", "seq", "embed"), (256, 128, 1024), ctx)
+    assert spec == P("data", None, None)
+
+
+def test_serve_rules_shard_kv_seq_not_heads():
+    spec = spec_for(("batch", "kv_seq", "kv_heads", None),
+                    (128, 32768, 8, 128), _ctx(rules=SERVE_RULES))
+    assert spec == P("data", "model", None, None)
+
+
+def test_big_model_gets_2d_weights():
+    big = serve_rules_for(get_config("qwen2-vl-72b"), "decode_32k")
+    small = serve_rules_for(get_config("qwen2-7b"), "decode_32k")
+    assert big["w_embed"] == ("pod", "data")
+    assert small["w_embed"] is None
+
+
+def test_long_context_rules_use_cp():
+    rules = serve_rules_for(get_config("mamba2-780m"), "long_500k")
+    assert rules["kv_seq"] == ("data", "model")
+    assert rules["batch"] is None
+
+
+def test_moe_tp_rules():
+    rules = train_rules_for(get_config("mixtral-8x7b"))
+    assert rules["experts"] is None
+    assert rules["expert_mlp"] == "model"
+    rules_ep = train_rules_for(get_config("dbrx-132b"))
+    assert rules_ep["experts"] == "model"
