@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cluster import ClusterSim, HostMemoryBroker, Router
 from repro.configs.base import get_config, reduced
 from repro.core.arena import ArenaSpec
 from repro.core.elastic import ElasticArena
@@ -246,6 +247,54 @@ def kernel_layout_cost() -> list[Row]:
              f"gather_overhead={paged_us/max(part_us,1e-9):.2f}x")]
 
 
+def cluster_reclaim() -> list[Row]:
+    """Host-level steal (paper §2 lifted to the cluster): two replicas
+    share one ``HostMemoryBroker`` budget below 2 full arenas.  Replica B
+    serves early load then goes quiet (warm containers idling); replica
+    A's burst then needs memory the free pool can't cover, so the broker
+    reclaims from the idlest VM — B.  Reports per-mode steal latency and
+    migrated bytes: hotmem steals are metadata-only (0 bytes moved),
+    vanilla steals pay real migration copies."""
+    rows: list[Row] = []
+    for mode in ("hotmem", "vanilla"):
+        cfg, spec = _cfg_spec(partition_tokens=128, n_partitions=8)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        bpp = spec.blocks_per_partition
+        broker = HostMemoryBroker(budget_units=10 * bpp)
+        engines = {rid: ServeEngine(cfg, params, spec, mode=mode,
+                                    keep_alive=3.0, seed=i, broker=broker,
+                                    replica_id=rid)
+                   for i, rid in enumerate(("A", "B"))}
+        quiet = bursty_trace(6.0, 0.9, burst_x=1.0, burst_len=0.0, seed=2)
+        burst = [4.0 + t for t in bursty_trace(
+            4.0, 3.0, burst_x=3.0, burst_at=(0.0,), burst_len=2.0, seed=3)]
+        reqs = [Request(rid=f"b{i}", profile=p, submit_s=t)
+                for i, (t, p) in enumerate(
+                    assign_profiles(quiet, PROFILES, 2))]
+        reqs += [Request(rid=f"a{i}", profile=p, submit_s=t)
+                 for i, (t, p) in enumerate(
+                     assign_profiles(burst, PROFILES, 3))]
+        sim = ClusterSim(
+            engines,
+            Router(route_fn=lambda r, e:
+                   "B" if r.rid.startswith("b") else "A"),
+            broker)
+        m = sim.run(reqs, max_virtual_s=2000)
+        broker.check_invariants()
+        rep = m["broker"]["by_mode"].get(mode, {})
+        steals = rep.get("steals", 0)
+        steal_us = rep.get("wall_seconds", 0.0) * 1e6 / max(steals, 1)
+        rows.append((
+            f"cluster_reclaim/{mode}", steal_us,
+            f"steals={steals} "
+            f"stolen_units={rep.get('units', 0)} "
+            f"migrated_B={rep.get('migrated_bytes', 0)} "
+            f"reclaimed_B={rep.get('reclaimed_bytes', 0)} "
+            f"completed={m['completed']}/{len(reqs)}"))
+    return rows
+
+
 ALL = [fig5_reclaim_latency_vs_size, fig6_reclaim_vs_occupancy,
        fig7_reclaim_compute, fig8_trace_reclaim_throughput,
-       fig9_p99_latency, fig10_interference, kernel_layout_cost]
+       fig9_p99_latency, fig10_interference, kernel_layout_cost,
+       cluster_reclaim]

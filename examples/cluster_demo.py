@@ -1,0 +1,69 @@
+"""Multi-replica host demo: one memory budget, two VM replicas, a broker.
+
+Replica B handles early steady load then idles (kept-alive containers);
+replica A's later burst outgrows the host's free pool, so the broker
+reclaims B's memory — sub-second and zero-copy under HotMem, migration
+copies under the vanilla paged baseline.
+
+  PYTHONPATH=src python examples/cluster_demo.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.cluster import ClusterSim, HostMemoryBroker, Router
+from repro.configs.base import get_config, reduced
+from repro.core.arena import ArenaSpec
+from repro.models import model as M
+from repro.serving.engine import ServeEngine
+from repro.serving.request import PROFILES, Request
+from repro.serving.tracegen import assign_profiles, bursty_trace
+
+
+def main() -> None:
+    cfg = reduced(get_config("qwen2-7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    spec = ArenaSpec.from_model(cfg, partition_tokens=128, n_partitions=8,
+                                block_tokens=32)
+    bpp = spec.blocks_per_partition
+
+    print(f"{'mode':10s} {'completed':>9s} {'steals':>6s} "
+          f"{'steal_ms':>9s} {'migratedKiB':>11s} {'reclaimedKiB':>12s}")
+    for mode in ("hotmem", "vanilla"):
+        # host budget: 10 partitions' worth — less than 2 full arenas, so
+        # A's burst cannot grow without shrinking B
+        broker = HostMemoryBroker(budget_units=10 * bpp)
+        engines = {rid: ServeEngine(cfg, params, spec, mode=mode,
+                                    keep_alive=3.0, seed=i, broker=broker,
+                                    replica_id=rid)
+                   for i, rid in enumerate(("A", "B"))}
+        quiet = bursty_trace(6.0, 0.9, burst_x=1.0, burst_len=0.0, seed=2)
+        burst = [4.0 + t for t in bursty_trace(
+            4.0, 3.0, burst_x=3.0, burst_at=(0.0,), burst_len=2.0, seed=3)]
+        reqs = [Request(rid=f"b{i}", profile=p, submit_s=t)
+                for i, (t, p) in enumerate(
+                    assign_profiles(quiet, PROFILES, 2))]
+        reqs += [Request(rid=f"a{i}", profile=p, submit_s=t)
+                 for i, (t, p) in enumerate(
+                     assign_profiles(burst, PROFILES, 3))]
+        router = Router(route_fn=lambda r, e:
+                        "B" if r.rid.startswith("b") else "A")
+        m = ClusterSim(engines, router, broker).run(reqs, max_virtual_s=2000)
+        rep = m["broker"]["by_mode"].get(mode, {})
+        print(f"{mode:10s} {m['completed']:9d} "
+              f"{rep.get('steals', 0):6d} "
+              f"{rep.get('wall_seconds', 0.0) * 1e3:9.2f} "
+              f"{rep.get('migrated_bytes', 0) / 1024:11.1f} "
+              f"{rep.get('reclaimed_bytes', 0) / 1024:12.1f}")
+    print("\nThe broker reclaims the idle replica's memory for the loaded"
+          "\none; HotMem makes that host-level steal zero-copy, the paged"
+          "\nbaseline pays real migration bytes for the same elasticity.")
+
+
+if __name__ == "__main__":
+    main()

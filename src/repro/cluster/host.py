@@ -1,0 +1,201 @@
+"""Host memory broker: the hypervisor/virtio-mem role of the paper, §2+§4.
+
+One physical host runs N VM-sandboxed replicas (each a ``ServeEngine``) and
+owns a fixed budget of memory units.  The broker is the host-side control
+plane that arbitrates that budget; its verbs map onto the paper's terms:
+
+  broker verb               paper mechanism
+  -----------------------   --------------------------------------------
+  ``register``              VM boot: the guest's initial memory plug
+  ``request_units``         virtio-mem **plug** request (guest asks the
+                            hypervisor for more memory blocks)
+  ``release_units``         virtio-mem **unplug** completion (guest hands
+                            reclaimed blocks back to the host)
+  ``_reclaim_from_idlest``  host memory pressure: the hypervisor shrinks
+                            the idlest VM (Squeezy's sub-second reclaim is
+                            what makes this cheap enough to do online)
+  unit (= one block)        a Linux 128 MiB memory block — here one
+                            ``block_tokens`` slab of arena state
+
+A unit is a *block* (``ArenaSpec.block_tokens`` worth of state), the finest
+granularity both managers share; HotMem replicas convert partitions to
+blocks at the boundary (1 partition = ``blocks_per_partition`` units).
+
+Conservation invariant (the test suite's anchor): at all times
+``free_units + sum(granted.values()) == budget_units`` — the host never
+double-grants a unit and never leaks one.
+
+``AlwaysGrantBroker`` is the single-replica degenerate case: an unmetered
+host that grants every request, so a lone ``ServeEngine`` behaves exactly
+as it did before the broker existed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+from repro.core.arena import ReclaimEvent
+
+# victim-side reclaim callback: (k_units) -> (units_reclaimed, event|None)
+ReclaimFn = Callable[[int], tuple[int, Optional[ReclaimEvent]]]
+
+
+@dataclasses.dataclass
+class StealRecord:
+    """One host-pressure reclaim: the broker shrank ``victim`` to feed
+    ``requester`` (the paper's headline metric is how fast this is)."""
+    requester: str
+    victim: str
+    units: int                   # blocks moved from victim to the free pool
+    wall_seconds: float          # victim-side reclaim latency
+    reclaimed_bytes: int
+    migrated_bytes: int          # 0 for hotmem victims by construction
+    mode: Optional[str] = None   # victim's manager mode
+
+
+class MemoryBroker:
+    """Interface: what a replica needs from its host."""
+
+    def register(self, replica_id: str, initial_units: int, *,
+                 reclaim: Optional[ReclaimFn] = None,
+                 load: Optional[Callable[[], int]] = None,
+                 mode: Optional[str] = None) -> None:
+        raise NotImplementedError
+
+    def request_units(self, replica_id: str, want: int) -> int:
+        raise NotImplementedError
+
+    def release_units(self, replica_id: str, units: int) -> None:
+        raise NotImplementedError
+
+
+class AlwaysGrantBroker(MemoryBroker):
+    """Unmetered host: every plug request is granted in full.  Used by a
+    standalone ``ServeEngine`` so single-replica behavior is unchanged."""
+
+    def register(self, replica_id: str, initial_units: int, **_: Any) -> None:
+        pass
+
+    def request_units(self, replica_id: str, want: int) -> int:
+        return max(want, 0)
+
+    def release_units(self, replica_id: str, units: int) -> None:
+        pass
+
+
+class HostMemoryBroker(MemoryBroker):
+    """Fixed-budget host arbiter: grant on demand, reclaim-from-idlest
+    under pressure."""
+
+    def __init__(self, budget_units: int):
+        assert budget_units > 0
+        self.budget_units = budget_units
+        self.free_units = budget_units
+        self.granted: dict[str, int] = {}
+        self._reclaim: dict[str, ReclaimFn] = {}
+        self._load: dict[str, Callable[[], int]] = {}
+        self._mode: dict[str, Optional[str]] = {}
+        self.steal_log: list[StealRecord] = []
+        self.grant_calls = 0
+        self.denied_units = 0        # requested-but-ungranted (pressure)
+
+    # ----------------------------------------------------------- lifecycle
+    def register(self, replica_id: str, initial_units: int, *,
+                 reclaim: Optional[ReclaimFn] = None,
+                 load: Optional[Callable[[], int]] = None,
+                 mode: Optional[str] = None) -> None:
+        """VM boot: carve the replica's initial plug out of the free pool."""
+        assert replica_id not in self.granted, replica_id
+        assert initial_units <= self.free_units, \
+            f"host budget exhausted registering {replica_id}: " \
+            f"need {initial_units}, free {self.free_units}"
+        self.free_units -= initial_units
+        self.granted[replica_id] = initial_units
+        if reclaim is not None:
+            self._reclaim[replica_id] = reclaim
+        if load is not None:
+            self._load[replica_id] = load
+        self._mode[replica_id] = mode
+
+    # --------------------------------------------------------- plug/unplug
+    def request_units(self, replica_id: str, want: int) -> int:
+        """virtio-mem plug: grant up to ``want`` units, stealing from the
+        idlest other replicas if the free pool can't cover it."""
+        assert replica_id in self.granted, replica_id
+        if want <= 0:
+            return 0
+        self.grant_calls += 1
+        if self.free_units < want:
+            self._reclaim_from_idlest(replica_id, want - self.free_units)
+        g = min(want, self.free_units)
+        self.free_units -= g
+        self.granted[replica_id] += g
+        self.denied_units += want - g
+        return g
+
+    def release_units(self, replica_id: str, units: int) -> None:
+        """virtio-mem unplug completion: units return to the host pool."""
+        if units <= 0:
+            return
+        assert self.granted.get(replica_id, 0) >= units, \
+            f"{replica_id} returning {units} units it was never granted"
+        self.granted[replica_id] -= units
+        self.free_units += units
+
+    def _reclaim_from_idlest(self, requester: str, deficit: int) -> None:
+        """Host pressure: shrink other replicas, idlest first (fewest
+        in-flight invocations — the VM whose reclaim disturbs least)."""
+        victims = sorted(
+            (r for r in self.granted
+             if r != requester and r in self._reclaim),
+            key=lambda r: (self._load[r]() if r in self._load else 0, r))
+        for v in victims:
+            if deficit <= 0:
+                break
+            t0 = time.perf_counter()
+            got, ev = self._reclaim[v](deficit)
+            wall = time.perf_counter() - t0
+            if got <= 0:
+                continue
+            assert got <= self.granted[v]
+            self.granted[v] -= got
+            self.free_units += got
+            deficit -= got
+            self.steal_log.append(StealRecord(
+                requester=requester, victim=v, units=got,
+                wall_seconds=ev.wall_seconds if ev is not None else wall,
+                reclaimed_bytes=ev.reclaimed_bytes if ev is not None else 0,
+                migrated_bytes=ev.migrated_bytes if ev is not None else 0,
+                mode=self._mode.get(v)))
+
+    # -------------------------------------------------------------- report
+    def report(self) -> dict[str, Any]:
+        """Host-level reclaim telemetry (per-mode steal latency — the
+        cluster analogue of the paper's Fig. 5)."""
+        by_mode: dict[str, dict[str, float]] = {}
+        for rec in self.steal_log:
+            d = by_mode.setdefault(rec.mode or "?", {
+                "steals": 0, "units": 0, "wall_seconds": 0.0,
+                "reclaimed_bytes": 0, "migrated_bytes": 0})
+            d["steals"] += 1
+            d["units"] += rec.units
+            d["wall_seconds"] += rec.wall_seconds
+            d["reclaimed_bytes"] += rec.reclaimed_bytes
+            d["migrated_bytes"] += rec.migrated_bytes
+        return {
+            "budget_units": self.budget_units,
+            "free_units": self.free_units,
+            "granted": dict(self.granted),
+            "steals": len(self.steal_log),
+            "grant_calls": self.grant_calls,
+            "denied_units": self.denied_units,
+            "by_mode": by_mode,
+        }
+
+    # ---------------------------------------------------------- invariants
+    def check_invariants(self) -> None:
+        assert self.free_units >= 0
+        assert all(g >= 0 for g in self.granted.values())
+        assert self.free_units + sum(self.granted.values()) \
+            == self.budget_units, "host units leaked or double-granted"

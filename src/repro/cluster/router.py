@@ -1,0 +1,57 @@
+"""Invocation router: spreads a shared trace across replicas.
+
+The FaaS front-end analogue: a host runs N replicas and every incoming
+invocation must be assigned to one.  Policies:
+
+  * ``least_loaded``  — send to the replica with the fewest in-flight +
+                        queued invocations (classic load spreading).
+  * ``warm_affinity`` — prefer a replica holding a warm (kept-alive)
+                        container for the same function profile, so the
+                        invocation skips prefill (the paper's warm-start
+                        fast path); falls back to least-loaded.
+
+Ties break on replica id, so routing is deterministic for a fixed trace.
+A custom ``route_fn(req, engines) -> replica_id`` overrides the policy
+(benchmarks use this to pin tenants to replicas).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+POLICIES = ("least_loaded", "warm_affinity")
+
+
+class Router:
+    def __init__(self, policy: str = "least_loaded",
+                 route_fn: Optional[Callable] = None):
+        assert route_fn is not None or policy in POLICIES, policy
+        self.policy = policy
+        self.route_fn = route_fn
+        self.routed: dict[str, int] = {}      # replica -> #assigned
+        self.warm_hits = 0
+
+    def _score(self, rid: str, engines, backlog) -> tuple[int, str]:
+        load = engines[rid].load() + (backlog or {}).get(rid, 0)
+        return (load, rid)
+
+    def route(self, req, engines: dict, backlog: Optional[dict] = None
+              ) -> str:
+        """Pick the replica for ``req``.  ``backlog`` counts routed-but-
+        not-yet-submitted invocations per replica (the router's own queue
+        view, so bursts don't all land on one replica)."""
+        if self.route_fn is not None:
+            rid = self.route_fn(req, engines)
+        else:
+            rid = None
+            if self.policy == "warm_affinity":
+                warm = [r for r, e in engines.items()
+                        if e.warm.get(req.profile.name)]
+                if warm:
+                    rid = min(warm,
+                              key=lambda r: self._score(r, engines, backlog))
+                    self.warm_hits += 1
+            if rid is None:
+                rid = min(engines,
+                          key=lambda r: self._score(r, engines, backlog))
+        self.routed[rid] = self.routed.get(rid, 0) + 1
+        return rid

@@ -1,0 +1,91 @@
+"""Multi-replica co-simulation: N ``ServeEngine`` replicas, one host.
+
+Each engine keeps its own virtual clock (advanced by measured wall time of
+its device ops).  The sim interleaves them deterministically: always tick
+the busy replica whose clock is furthest behind, and route each arrival
+only once every busy replica has caught up to its submit time — so routing
+decisions see the cluster state "at" the arrival instant, and a fixed
+(trace, seed) pair replays identically.
+
+The broker couples the replicas: a loaded replica's plug request may
+synchronously shrink an idle one (``HostMemoryBroker._reclaim_from_idlest``
+-> victim's ``reclaim_for_broker``), charging the victim's clock with the
+reclaim stall — hotmem's is metadata-only, vanilla's includes migration
+copies, exactly the paper's contrast lifted to host level.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.cluster.router import Router
+from repro.serving.request import State
+
+
+class ClusterSim:
+    def __init__(self, engines: dict[str, Any], router: Optional[Router]
+                 = None, broker=None):
+        assert engines
+        self.engines = dict(engines)
+        self.router = router or Router()
+        self.broker = broker          # kept for metrics; engines hold a ref
+
+    # ------------------------------------------------------------------ run
+    def run(self, requests: list, max_virtual_s: float = 1e9,
+            max_ticks: int = 500_000) -> dict[str, Any]:
+        arrivals = deque(sorted(requests, key=lambda r: r.submit_s))
+        todos = {rid: deque() for rid in self.engines}
+        ticks = 0
+
+        def busy(rid: str) -> bool:
+            e = self.engines[rid]
+            return bool(todos[rid] or e.pending or e.active
+                        or any(e.warm.values())) and e.now < max_virtual_s
+
+        while ticks < max_ticks:
+            busy_ids = [rid for rid in self.engines if busy(rid)]
+            if arrivals:
+                t_arr = arrivals[0].submit_s
+                lagging = [r for r in busy_ids
+                           if self.engines[r].now < t_arr]
+                if lagging:
+                    rid = min(lagging,
+                              key=lambda r: (self.engines[r].now, r))
+                    self.engines[rid]._tick(todos[rid])
+                    ticks += 1
+                    continue
+                req = arrivals.popleft()
+                backlog = {r: len(todos[r]) for r in self.engines}
+                target = self.router.route(req, self.engines, backlog)
+                todos[target].append(req)
+                continue
+            if not busy_ids:
+                break
+            rid = min(busy_ids, key=lambda r: (self.engines[r].now, r))
+            self.engines[rid]._tick(todos[rid])
+            ticks += 1
+        return self.metrics()
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> dict[str, Any]:
+        per = {rid: e.metrics() for rid, e in self.engines.items()}
+        done = [r for e in self.engines.values() for r in e.done]
+        lat = [r.latency for r in done
+               if r.latency is not None and r.state is State.DONE]
+        out: dict[str, Any] = {
+            "completed": sum(r.state is State.DONE for r in done),
+            "killed": sum(r.state is State.KILLED for r in done),
+            "latency_p50": float(np.percentile(lat, 50)) if lat else None,
+            "latency_p99": float(np.percentile(lat, 99)) if lat else None,
+            "reclaimed_bytes": sum(m["reclaimed_bytes"]
+                                   for m in per.values()),
+            "migrated_bytes": sum(m["migrated_bytes"] for m in per.values()),
+            "reclaim_events": sum(m["reclaim_events"] for m in per.values()),
+            "per_replica": per,
+            "routed": dict(self.router.routed),
+        }
+        if self.broker is not None:
+            out["broker"] = self.broker.report()
+        return out

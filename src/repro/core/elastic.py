@@ -16,7 +16,7 @@ not a model of them.
 from __future__ import annotations
 
 import time
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -139,12 +139,19 @@ class ElasticArena:
 
     ``mode``: "hotmem" | "vanilla" | "static" (statically over-provisioned —
     the paper's third comparison point: never resizes).
+
+    ``grant`` / ``release`` are the host gate (virtio-mem): when set,
+    growth is a *request* — ``grant(units)`` returns how many units the
+    host actually concedes (possibly zero, possibly after shrinking an
+    idler replica) — and every unit this arena drops flows back through
+    ``release``.  Without them the arena resizes unilaterally, the
+    pre-broker single-replica behavior.
     """
 
     MOVE_CAPACITY = 256      # padded migration vector (one executable)
 
     def __init__(self, cfg, spec: ArenaSpec, mode: str, caches=None,
-                 seed: int = 0):
+                 seed: int = 0, grant=None, release=None):
         self.cfg = cfg
         self.spec = spec
         self.mode = mode
@@ -153,6 +160,8 @@ class ElasticArena:
             self.manager = VanillaPagedManager(spec, seed=seed)
         else:
             self.manager = HotMemManager(spec)
+        self._grant: Optional[Callable[[int], int]] = grant
+        self._release: Optional[Callable[[int], None]] = release
         self.plug_seconds: list[float] = []
 
     # ------------------------------------------------------------ lifecycle
@@ -173,12 +182,21 @@ class ElasticArena:
         return self.manager.plugged
 
     def plug(self, units: int) -> float:
-        """Grow the arena; returns wall seconds (incl. zero-fill)."""
+        """Grow the arena; returns wall seconds (incl. zero-fill).  With a
+        host gate, ``units`` is a request — the host grants what it can
+        (stealing from an idler replica under pressure) and any grant the
+        manager can't absorb flows straight back."""
         if self.mode == "static":
+            return 0.0
+        if self._grant is not None:
+            units = self._grant(units)
+        if units <= 0:
             return 0.0
         t0 = time.perf_counter()
         old = self.units()
         added = self.manager.plug(units)
+        if self._release is not None and units > added:
+            self._release(units - added)      # manager clamped; hand back
         if added and self.caches is not None:
             self.caches = grow_rows(self.caches, old + added)
             self.caches = zero_rows(self.caches, jnp.asarray(old),
@@ -188,9 +206,11 @@ class ElasticArena:
         self.plug_seconds.append(dt)
         return dt
 
-    def unplug(self, units: int) -> ReclaimEvent:
+    def unplug(self, units: int, notify_host: bool = True) -> ReclaimEvent:
         """Shrink the arena; HotMem = metadata + prefix slice, vanilla =
-        migration copies + prefix slice.  Real device timings."""
+        migration copies + prefix slice.  Real device timings.  Reclaimed
+        units flow back to the host gate unless ``notify_host`` is False
+        (the broker-initiated steal path, which does its own accounting)."""
         assert self.mode != "static"
         t0 = time.perf_counter()
         if self.mode == "hotmem":
@@ -199,6 +219,9 @@ class ElasticArena:
                 self.caches = slice_rows(self.caches, self.manager.plugged)
                 jax.block_until_ready(jax.tree.leaves(self.caches)[0])
             ev.wall_seconds = time.perf_counter() - t0
+            if notify_host and self._release is not None \
+                    and ev.reclaimed_units:
+                self._release(ev.reclaimed_units)
             return ev
         # vanilla: plan migrations, run copies, then commit + truncate
         k, moves = self.manager.shrink_plan(units)
@@ -223,4 +246,6 @@ class ElasticArena:
                 lambda x: x[:self.manager.pool_blocks], self.caches)
             jax.block_until_ready(jax.tree.leaves(self.caches)[0])
         ev.wall_seconds = time.perf_counter() - t0
+        if notify_host and self._release is not None and ev.reclaimed_units:
+            self._release(ev.reclaimed_units)
         return ev

@@ -27,8 +27,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cluster.host import AlwaysGrantBroker, MemoryBroker
 from repro.configs.base import ModelConfig
-from repro.core.arena import ArenaSpec
+from repro.core.arena import ArenaSpec, ReclaimEvent
 from repro.core.elastic import ElasticArena, bucket_ladder, target_bucket
 from repro.models import model as M
 from repro.serving.request import Request, State
@@ -47,7 +48,9 @@ class StepEvent:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, spec: ArenaSpec, *,
                  mode: str = "hotmem", keep_alive: float = 10.0,
-                 headroom: int = 1, seed: int = 0, prewarm: bool = True):
+                 headroom: int = 1, seed: int = 0, prewarm: bool = True,
+                 broker: Optional[MemoryBroker] = None,
+                 replica_id: str = "r0"):
         assert mode in ("hotmem", "vanilla", "static")
         if mode == "vanilla":
             assert cfg.family not in ("ssm", "hybrid"), \
@@ -70,7 +73,8 @@ class ServeEngine:
         # the device tree (one copy, donated through the decode step)
         self.pool = self._make_pool(start) if mode == "vanilla" else None
         self.arena = ElasticArena(cfg, spec, mode, caches=self.pool,
-                                  seed=seed)
+                                  seed=seed, grant=self._host_grant,
+                                  release=self._host_release)
         if mode != "vanilla":
             # managers sized in partitions; ladder starts small
             self.arena.manager.plugged = start
@@ -82,6 +86,15 @@ class ServeEngine:
             self.arena.manager.pool_blocks = start * bpp
             self.arena.manager._free = list(range(start * bpp))
             self.arena.manager._rng.shuffle(self.arena.manager._free)
+
+        # host control plane: growth is a *request* to the broker, never a
+        # unilateral resize.  Standalone engines get an unmetered broker,
+        # so single-replica behavior is byte-identical to pre-broker code.
+        self.replica_id = replica_id
+        self.broker = broker if broker is not None else AlwaysGrantBroker()
+        self.broker.register(
+            replica_id, start * spec.blocks_per_partition,
+            reclaim=self.reclaim_for_broker, load=self.load, mode=mode)
 
         self.now = 0.0
         self.pending: deque[Request] = deque()
@@ -112,6 +125,26 @@ class ServeEngine:
         jax.block_until_ready(out)
 
     # ------------------------------------------------------------ plumbing
+    def _host_grant(self, native: int) -> int:
+        """Arena host gate: convert this replica's native units (partitions
+        for hotmem, blocks for vanilla) to broker blocks, request them, and
+        floor the grant back to native granularity."""
+        bpp = self.spec.blocks_per_partition
+        want = native if self.mode == "vanilla" else native * bpp
+        got = self.broker.request_units(self.replica_id, want)
+        if self.mode == "vanilla":
+            return got
+        rem = got % bpp
+        if rem:                           # sub-partition remainder: no use
+            self.broker.release_units(self.replica_id, rem)
+        return got // bpp
+
+    def _host_release(self, native: int) -> None:
+        self.broker.release_units(
+            self.replica_id,
+            native if self.mode == "vanilla" else
+            native * self.spec.blocks_per_partition)
+
     def _make_pool(self, parts: int):
         """Physical paged twin: every token-extensive leaf becomes a flat
         (NB, block_tokens, ...) block pool — one manager block id maps to
@@ -290,17 +323,24 @@ class ServeEngine:
         tgt = target_bucket(self.ladder, max(demand, self.ladder[0]))
         cur = self._units()
         if tgt > cur:
+            # growth is a plug *request* through the arena's host gate: the
+            # broker may grant less than asked (and may first steal from an
+            # idler replica to cover it), so size the row sync to what the
+            # arena actually got
             k = tgt - cur
             units = k if self.mode != "vanilla" else \
                 k * self.spec.blocks_per_partition
+            before = self.arena.units()
             wall = self.arena.plug(units)
-            t0 = time.perf_counter()
-            self._sync_rows(self._units())
-            jax.block_until_ready(jax.tree.leaves(self.caches)[0])
-            wall += time.perf_counter() - t0
-            self.now += wall
-            self.events.append(StepEvent(self.now, "plug", wall,
-                                         {"units": units}))
+            added = self.arena.units() - before
+            if added:
+                t0 = time.perf_counter()
+                self._sync_rows(self._units())
+                jax.block_until_ready(jax.tree.leaves(self.caches)[0])
+                wall += time.perf_counter() - t0
+                self.now += wall
+                self.events.append(StepEvent(self.now, "plug", wall,
+                                             {"units": added}))
         elif tgt < cur:
             k = cur - tgt
             if self.mode == "hotmem" and \
@@ -308,16 +348,26 @@ class ServeEngine:
                 return                       # nothing reclaimable yet
             units = k if self.mode != "vanilla" else \
                 k * self.spec.blocks_per_partition
-            ev = self.arena.unplug(units)
-            t0 = time.perf_counter()
-            self._sync_rows(self._units())
-            jax.block_until_ready(jax.tree.leaves(self.caches)[0])
-            ev.wall_seconds += time.perf_counter() - t0
-            self.now += ev.wall_seconds
-            self.events.append(StepEvent(
-                self.now, "unplug", ev.wall_seconds,
-                {"reclaimed_bytes": ev.reclaimed_bytes,
-                 "migrated_bytes": ev.migrated_bytes}))
+            self._unplug_now(units)
+
+    def _unplug_now(self, units: int, *, stolen: bool = False
+                    ) -> ReclaimEvent:
+        """Unplug + row sync + virtual-clock charge + event log — shared by
+        self-initiated shrink and broker-initiated steals (which do their
+        own host accounting, hence ``notify_host=False``)."""
+        ev = self.arena.unplug(units, notify_host=not stolen)
+        t0 = time.perf_counter()
+        self._sync_rows(self._units())
+        jax.block_until_ready(jax.tree.leaves(self.caches)[0])
+        ev.wall_seconds += time.perf_counter() - t0
+        self.now += ev.wall_seconds
+        detail = {"reclaimed_bytes": ev.reclaimed_bytes,
+                  "migrated_bytes": ev.migrated_bytes}
+        if stolen:
+            detail["stolen"] = True
+        self.events.append(StepEvent(self.now, "unplug", ev.wall_seconds,
+                                     detail))
+        return ev
 
     def _sync_rows(self, parts: int) -> None:
         """Match the model-facing row cache to the arena partition count."""
@@ -331,29 +381,101 @@ class ServeEngine:
         else:
             self.caches = M.cache_slice_rows(self.caches, parts)
 
+    # ------------------------------------------------------- broker victim
+    def load(self) -> int:
+        """In-flight + queued invocations (the broker's idleness signal)."""
+        return len(self.active) + len(self.pending)
+
+    def _free_units(self) -> int:
+        if self.mode == "vanilla":
+            return self.arena.manager.free_blocks \
+                // self.spec.blocks_per_partition
+        return self.arena.manager.free_partitions
+
+    def _evict_warm_suffix(self, k_parts: int) -> None:
+        """HotMem shrink drops only a *free suffix* of the arena: extend
+        that suffix by recycling warm (idle) containers sitting on its
+        high rows, stopping at the first active row — killing anything
+        below it cannot help and would waste warm-start state."""
+        mgr = self.arena.manager
+        warm_rows = {row: (t, prof, rid)
+                     for prof, es in self.warm.items()
+                     for (t, rid, row) in es}
+        free = set(mgr._free)
+        need, p = k_parts, mgr.plugged - 1
+        while p >= 0 and need > 0:
+            if p in free:
+                need -= 1
+            elif p in warm_rows:
+                t, prof, rid = warm_rows[p]
+                self.arena.finish(rid)
+                self.warm[prof].remove((t, rid, p))
+                need -= 1
+            else:
+                break                      # active row blocks the suffix
+            p -= 1
+
+    def reclaim_for_broker(self, k_blocks: int
+                           ) -> tuple[int, Optional[ReclaimEvent]]:
+        """Victim side of a host steal: the broker (hypervisor) needs
+        ``k_blocks`` back.  Recycle idle warm containers (hotmem: the ones
+        blocking the free suffix; vanilla: oldest-first until enough blocks
+        are free), then unplug — charging this replica's clock with the
+        reclaim stall (hotmem: metadata-only; vanilla: migration copies).
+        Returns (blocks actually freed, event)."""
+        if self.mode == "static":
+            return 0, None
+        bpp = self.spec.blocks_per_partition
+        k_parts = -(-k_blocks // bpp)
+        if self.mode == "hotmem":
+            self._evict_warm_suffix(k_parts)
+            if not self.arena.manager.shrink_plan(k_parts):
+                return 0, None
+            units = k_parts
+        else:
+            entries = sorted((t, prof, rid, row)
+                             for prof, es in self.warm.items()
+                             for (t, rid, row) in es)
+            for t, prof, rid, row in entries:
+                if self._free_units() >= k_parts:
+                    break
+                self.arena.finish(rid)
+                self.warm[prof].remove((t, rid, row))
+            units = k_parts * bpp
+        ev = self._unplug_now(units, stolen=True)
+        return (ev.reclaimed_units *
+                (1 if self.mode == "vanilla" else bpp)), ev
+
     # ----------------------------------------------------------------- run
+    def _tick(self, todo: deque) -> None:
+        """One scheduler iteration: submit due arrivals, admit, decode (or
+        let time pass), recycle idle containers, resize.  ``run`` loops
+        this for a standalone replica; ``ClusterSim`` interleaves ticks
+        across replicas in virtual-time order."""
+        while todo and todo[0].submit_s <= self.now:
+            self.submit(todo.popleft())
+        if not self.active and not self.pending and todo:
+            self.now = max(self.now, todo[0].submit_s)
+            return
+        self._try_admit()
+        if self._row_req:
+            self._decode()
+        elif self.pending:
+            # stuck in waitqueue: let time pass so warm rows expire /
+            # the next resize can plug (regardless of future arrivals)
+            self.now += 0.01
+        elif not todo and not self.pending and not self.active:
+            # drain: idle containers age out, triggering final unplugs
+            # (the paper's post-burst scale-down, Fig. 8)
+            self.now += self.keep_alive / 8
+        self._recycle_idle()
+        self._resize()
+
     def run(self, requests: list[Request], max_virtual_s: float = 1e9):
         todo = deque(sorted(requests, key=lambda r: r.submit_s))
         while (todo or self.pending or self.active
                or any(self.warm.values())) and self.now < max_virtual_s:
-            while todo and todo[0].submit_s <= self.now:
-                self.submit(todo.popleft())
-            if not self.active and not self.pending and todo:
-                self.now = max(self.now, todo[0].submit_s)
-                continue
-            self._try_admit()
-            if self._row_req:
-                self._decode()
-            elif self.pending:
-                # stuck in waitqueue: let time pass so warm rows expire /
-                # the next resize can plug (regardless of future arrivals)
-                self.now += 0.01
-            elif not todo and not self.pending and not self.active:
-                # drain: idle containers age out, triggering final unplugs
-                # (the paper's post-burst scale-down, Fig. 8)
-                self.now += self.keep_alive / 8
-            self._recycle_idle()
-            self._resize()
+            self._tick(todo)
         return self.metrics()
 
     def metrics(self) -> dict[str, Any]:

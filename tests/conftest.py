@@ -9,6 +9,33 @@ import pytest
 
 jax.config.update("jax_platform_name", "cpu")
 
+# jit-heavy modules: every test in these files is tier-"slow" (compilation
+# dominates).  ``pytest -m "not slow"`` is the <60s inner loop; the full
+# tier-1 command runs everything (see ROADMAP.md "Test tiers").
+SLOW_FILES = {
+    "test_kernels.py",
+    "test_decode_consistency.py",
+    "test_archs.py",
+    "test_serving.py",
+    "test_serving_hedge.py",
+    "test_system.py",
+    "test_training.py",
+    "test_checkpoint.py",
+}
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: jit-heavy test (compilation-bound); excluded from the fast "
+        "tier via -m 'not slow'")
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if item.fspath.basename in SLOW_FILES:
+            item.add_marker(pytest.mark.slow)
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -1,8 +1,16 @@
-"""Property-based tests (hypothesis) on the managers' invariants — the
-paper's correctness core: partitions never double-booked, refcounts sound,
-HotMem reclaim never migrates, vanilla reclaim preserves every live block."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+"""Property-based tests on the managers' invariants — the paper's
+correctness core: partitions never double-booked, refcounts sound, HotMem
+reclaim never migrates, vanilla reclaim preserves every live block.
+
+Two drivers over the same op-stream interpreters:
+  * hypothesis (when installed) explores adversarial op sequences;
+  * a seeded pure-pytest fallback (``random.Random(0)``) replays fixed
+    pseudo-random sequences, so the invariants are exercised on every run
+    even where hypothesis is absent (this container).
+"""
+import random
+
+import pytest
 
 from repro.core.arena import ArenaSpec
 from repro.core.hotmem import HotMemManager
@@ -11,23 +19,15 @@ from repro.core.vanilla import VanillaPagedManager
 SPEC = ArenaSpec(partition_tokens=64, n_partitions=8, block_tokens=16,
                  bytes_per_partition=1024)
 
-# op stream: (kind, arg)
-OPS = st.lists(
-    st.one_of(
-        st.tuples(st.just("reserve"), st.integers(0, 15)),
-        st.tuples(st.just("grow"), st.integers(0, 15)),
-        st.tuples(st.just("release"), st.integers(0, 15)),
-        st.tuples(st.just("fork"), st.integers(0, 15)),
-        st.tuples(st.just("plug"), st.integers(1, 4)),
-        st.tuples(st.just("unplug"), st.integers(1, 4)),
-    ),
-    min_size=1, max_size=60,
-)
+OP_KINDS = ("reserve", "grow", "release", "fork", "plug", "unplug")
 
 
-@settings(max_examples=200, deadline=None)
-@given(OPS)
-def test_hotmem_invariants(ops):
+# ---------------------------------------------------------------- drivers
+
+
+def run_hotmem_ops(ops):
+    """Interpret an op stream against HotMemManager, checking invariants
+    after every op; returns the live-request set for the final assert."""
     m = HotMemManager(SPEC, plugged=4)
     live = set()
     for kind, arg in ops:
@@ -52,12 +52,11 @@ def test_hotmem_invariants(ops):
             assert ev.migrated_blocks == 0
         m.check_invariants()
     assert m.live_partitions == len(live)
+    return m, live
 
 
-@settings(max_examples=200, deadline=None)
-@given(OPS)
-def test_vanilla_invariants(ops):
-    m = VanillaPagedManager(SPEC, seed=1)
+def run_vanilla_ops(ops, seed=1):
+    m = VanillaPagedManager(SPEC, seed=seed)
     live = set()
     for kind, arg in ops:
         rid = f"r{arg}"
@@ -81,11 +80,84 @@ def test_vanilla_invariants(ops):
         elif kind == "plug":
             m.plug(arg * SPEC.blocks_per_partition)
         m.check_invariants()
+    return m, live
 
 
-@settings(max_examples=100, deadline=None)
-@given(st.integers(1, 8), st.integers(0, 8))
-def test_hotmem_unplug_only_free_suffix(n_live, k):
+def _seeded_ops(seed, n_ops):
+    """Pure-pytest fallback op stream: same shape as the hypothesis one."""
+    rng = random.Random(seed)
+    ops = []
+    for _ in range(n_ops):
+        kind = rng.choice(OP_KINDS)
+        if kind in ("plug", "unplug"):
+            ops.append((kind, rng.randint(1, 4)))
+        else:
+            ops.append((kind, rng.randint(0, 15)))
+    return ops
+
+
+# ------------------------------------------------- hypothesis (if present)
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    OPS = st.lists(
+        st.one_of(
+            st.tuples(st.just("reserve"), st.integers(0, 15)),
+            st.tuples(st.just("grow"), st.integers(0, 15)),
+            st.tuples(st.just("release"), st.integers(0, 15)),
+            st.tuples(st.just("fork"), st.integers(0, 15)),
+            st.tuples(st.just("plug"), st.integers(1, 4)),
+            st.tuples(st.just("unplug"), st.integers(1, 4)),
+        ),
+        min_size=1, max_size=60,
+    )
+
+    @settings(max_examples=200, deadline=None)
+    @given(OPS)
+    def test_hotmem_invariants(ops):
+        run_hotmem_ops(ops)
+
+    @settings(max_examples=200, deadline=None)
+    @given(OPS)
+    def test_vanilla_invariants(ops):
+        run_vanilla_ops(ops)
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(1, 8), st.integers(0, 8))
+    def test_hotmem_unplug_only_free_suffix(n_live, k):
+        _check_unplug_only_free_suffix(n_live, k)
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(2, 8))
+    def test_waitqueue_fifo_wakeup(n):
+        _check_waitqueue_fifo(n)
+else:
+    def test_hypothesis_missing_is_reported():
+        """Collection must stay green without hypothesis; the seeded
+        fallback below carries the invariant coverage."""
+        pytest.importorskip("hypothesis")
+
+
+# ------------------------------------------------ seeded pytest fallback
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_hotmem_invariants_seeded(seed):
+    run_hotmem_ops(_seeded_ops(seed, 60))
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_vanilla_invariants_seeded(seed):
+    run_vanilla_ops(_seeded_ops(1000 + seed, 60))
+
+
+def _check_unplug_only_free_suffix(n_live, k):
     """Unplug must never touch a live partition (zero-migration is only
     possible because shrink takes empty partitions exclusively)."""
     m = HotMemManager(SPEC)
@@ -100,9 +172,7 @@ def test_hotmem_unplug_only_free_suffix(n_live, k):
     m.check_invariants()
 
 
-@settings(max_examples=100, deadline=None)
-@given(st.integers(2, 8))
-def test_waitqueue_fifo_wakeup(n):
+def _check_waitqueue_fifo(n):
     m = HotMemManager(SPEC, plugged=1)
     assert m.reserve("holder") is not None
     for i in range(n):
@@ -110,3 +180,14 @@ def test_waitqueue_fifo_wakeup(n):
     woken = m.release("holder")
     assert woken == "w0"                    # FIFO
     assert list(m.waitqueue) == [f"w{i}" for i in range(1, n)]
+
+
+@pytest.mark.parametrize("n_live,k", [(n, k) for n in range(1, 9)
+                                      for k in (0, 2, 4, 8)])
+def test_unplug_only_free_suffix_seeded(n_live, k):
+    _check_unplug_only_free_suffix(n_live, k)
+
+
+@pytest.mark.parametrize("n", range(2, 9))
+def test_waitqueue_fifo_wakeup_seeded(n):
+    _check_waitqueue_fifo(n)

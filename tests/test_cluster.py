@@ -1,0 +1,363 @@
+"""Cluster layer: broker conservation, no double-grant, reclaim-from-idlest
+ordering, router policies, cross-mode steal cost, and the single-replica
+regression guard for the broker refactor.
+
+Fast tests exercise the broker/router as pure metadata (seeded,
+deterministic, invariants checked after every simulated event); the
+``slow``-marked ones run real two-replica ``ServeEngine`` co-simulations.
+"""
+import random
+
+import pytest
+
+from repro.cluster import (AlwaysGrantBroker, ClusterSim, HostMemoryBroker,
+                           Router)
+from repro.core.arena import ArenaSpec
+from repro.core.elastic import ElasticArena
+
+SPEC = ArenaSpec(partition_tokens=64, n_partitions=8, block_tokens=16,
+                 bytes_per_partition=1024)
+BPP = SPEC.blocks_per_partition
+
+
+# ----------------------------------------------------------------- broker
+
+
+def test_broker_conservation_seeded():
+    """Random request/release streams never create or destroy units."""
+    rng = random.Random(0)
+    broker = HostMemoryBroker(budget_units=64)
+    for rid in ("a", "b", "c"):
+        broker.register(rid, 8)
+        broker.check_invariants()
+    for _ in range(500):
+        rid = rng.choice(("a", "b", "c"))
+        if rng.random() < 0.5:
+            got = broker.request_units(rid, rng.randint(1, 16))
+            assert got >= 0
+        else:
+            have = broker.granted[rid]
+            if have:
+                broker.release_units(rid, rng.randint(1, have))
+        broker.check_invariants()
+        assert sum(broker.granted.values()) <= broker.budget_units
+
+
+def test_broker_no_double_grant():
+    """Two replicas racing for the pool can never hold more than the
+    budget between them, and grants are clipped, not overcommitted."""
+    broker = HostMemoryBroker(budget_units=10)
+    broker.register("a", 0)
+    broker.register("b", 0)
+    assert broker.request_units("a", 7) == 7
+    assert broker.request_units("b", 7) == 3          # only 3 left
+    assert broker.request_units("b", 5) == 0          # pool empty, no victim
+    broker.check_invariants()
+    assert broker.granted == {"a": 7, "b": 3}
+    assert broker.denied_units == 4 + 5
+
+
+def test_broker_rejects_bad_release():
+    broker = HostMemoryBroker(budget_units=8)
+    broker.register("a", 2)
+    with pytest.raises(AssertionError):
+        broker.release_units("a", 3)                  # more than granted
+
+
+def test_broker_register_over_budget():
+    broker = HostMemoryBroker(budget_units=8)
+    broker.register("a", 6)
+    with pytest.raises(AssertionError):
+        broker.register("b", 6)
+
+
+def test_reclaim_from_idlest_ordering():
+    """Under pressure the broker shrinks the idlest victim first, then the
+    next-idlest, never touching the requester."""
+    broker = HostMemoryBroker(budget_units=24)
+    calls = []
+
+    def mk(rid, give):
+        def cb(k):
+            calls.append(rid)
+            got = min(k, give)
+            return got, None
+        return cb
+
+    loads = {"busy": 9, "mid": 3, "idle": 0}
+    for rid in ("busy", "mid", "idle"):
+        broker.register(rid, 8, reclaim=mk(rid, 4),
+                        load=lambda r=rid: loads[r], mode="hotmem")
+    # requester "busy" needs 8; free pool is 0 -> steal 4 from idle, 4 mid
+    got = broker.request_units("busy", 8)
+    assert got == 8
+    assert calls == ["idle", "mid"]                   # idlest first
+    assert "busy" not in calls
+    broker.check_invariants()
+    assert len(broker.steal_log) == 2
+    assert [r.victim for r in broker.steal_log] == ["idle", "mid"]
+    assert all(r.requester == "busy" for r in broker.steal_log)
+
+
+def test_always_grant_broker_is_unmetered():
+    broker = AlwaysGrantBroker()
+    broker.register("solo", 10 ** 9)
+    assert broker.request_units("solo", 123) == 123
+    broker.release_units("solo", 10 ** 12)            # never complains
+
+
+# ----------------------------------------------------------------- router
+
+
+class _FakeEngine:
+    def __init__(self, load, warm=()):
+        self._load = load
+        self.warm = {name: [(0.0, "rid", 0)] for name in warm}
+
+    def load(self):
+        return self._load
+
+
+class _Prof:
+    def __init__(self, name):
+        self.name = name
+
+
+class _Req:
+    def __init__(self, profile):
+        self.profile = _Prof(profile)
+
+
+def test_router_least_loaded_deterministic():
+    engines = {"a": _FakeEngine(3), "b": _FakeEngine(1), "c": _FakeEngine(1)}
+    r = Router("least_loaded")
+    assert r.route(_Req("cnn"), engines) == "b"        # tie -> lowest id
+    # backlog counts routed-but-unsubmitted work
+    assert r.route(_Req("cnn"), engines, {"b": 5}) == "c"
+    assert r.routed == {"b": 1, "c": 1}
+
+
+def test_router_warm_affinity():
+    engines = {"a": _FakeEngine(0), "b": _FakeEngine(5, warm=("cnn",))}
+    r = Router("warm_affinity")
+    assert r.route(_Req("cnn"), engines) == "b"        # warm beats load
+    assert r.warm_hits == 1
+    assert r.route(_Req("bert"), engines) == "a"       # no warm -> least
+
+
+# --------------------------------------------- cross-mode steal (metadata)
+
+
+class _ArenaReplica:
+    """Minimal broker client wrapping an ElasticArena: enough to exercise a
+    victim-side steal without a model (fast tier)."""
+
+    def __init__(self, mode, seed=0):
+        self.mode = mode
+        per_block = max(SPEC.bytes_per_block // 2, 2)
+        caches = None
+        if mode == "vanilla":
+            import jax.numpy as jnp
+            caches = [jnp.zeros((SPEC.n_blocks, per_block), jnp.bfloat16)]
+        self.arena = ElasticArena(None, SPEC, mode, caches=caches, seed=seed)
+
+    def reclaim(self, k_blocks):
+        k_parts = -(-k_blocks // BPP)
+        units = k_parts if self.mode != "vanilla" else k_parts * BPP
+        ev = self.arena.unplug(units)
+        self.arena.manager.check_invariants()
+        blocks = ev.reclaimed_units * (1 if self.mode == "vanilla" else BPP)
+        return blocks, ev
+
+
+@pytest.mark.parametrize("mode", ["hotmem", "vanilla"])
+def test_cross_mode_steal_migration_bytes(mode):
+    """THE host-level paper property: stealing from a hotmem victim moves
+    zero bytes; from a vanilla victim it must migrate live blocks."""
+    victim = _ArenaReplica(mode, seed=3)
+    broker = HostMemoryBroker(budget_units=2 * SPEC.n_blocks)
+    broker.register("victim", SPEC.n_blocks, reclaim=victim.reclaim,
+                    load=lambda: 0, mode=mode)
+    broker.register("loaded", SPEC.n_blocks, load=lambda: 9, mode=mode)
+    # victim serves 8 requests, then all but one finish (quiet tail);
+    # the survivor keeps a *low* partition (hotmem shrinks the free
+    # suffix) but its vanilla blocks are scattered pool-wide — those are
+    # what a vanilla steal must migrate
+    for i in range(8):
+        victim.arena.admit(f"r{i}")
+        victim.arena.on_tokens(f"r{i}", 64)
+    victim.arena.manager.check_invariants()
+    for i in range(8):
+        if i != 1:
+            victim.arena.finish(f"r{i}")
+        victim.arena.manager.check_invariants()
+    got = broker.request_units("loaded", 4 * BPP)
+    broker.check_invariants()
+    assert got == 4 * BPP                              # steal succeeded
+    assert len(broker.steal_log) == 1
+    rec = broker.steal_log[0]
+    assert rec.victim == "victim" and rec.mode == mode
+    if mode == "hotmem":
+        assert rec.migrated_bytes == 0                 # C1 at host level
+    else:
+        assert rec.migrated_bytes > 0                  # copies were real
+    assert broker.report()["by_mode"][mode]["migrated_bytes"] \
+        == rec.migrated_bytes
+
+
+# --------------------------------------------- engine integration (slow)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+    from repro.configs.base import get_config, reduced
+    from repro.models import model as M
+    cfg = reduced(get_config("qwen2-7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    spec = ArenaSpec.from_model(cfg, partition_tokens=128, n_partitions=8,
+                                block_tokens=32)
+    return cfg, params, spec
+
+
+def _cluster_reqs():
+    from repro.serving.request import PROFILES, Request
+    from repro.serving.tracegen import assign_profiles, bursty_trace
+    quiet = bursty_trace(6.0, 0.9, burst_x=1.0, burst_len=0.0, seed=2)
+    burst = [4.0 + t for t in bursty_trace(4.0, 3.0, burst_x=3.0,
+                                           burst_at=(0.0,), burst_len=2.0,
+                                           seed=3)]
+    reqs = [Request(rid=f"b{i}", profile=p, submit_s=t)
+            for i, (t, p) in enumerate(assign_profiles(quiet, PROFILES, 2))]
+    reqs += [Request(rid=f"a{i}", profile=p, submit_s=t)
+             for i, (t, p) in enumerate(assign_profiles(burst, PROFILES, 3))]
+    return reqs
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["hotmem", "vanilla"])
+def test_cluster_steal_end_to_end(setup, mode):
+    """Two replicas, shared budget below 2 full arenas: replica A's burst
+    forces the broker to steal replica B's quiet-tail memory."""
+    from repro.serving.engine import ServeEngine
+    cfg, params, spec = setup
+    bpp = spec.blocks_per_partition
+    broker = HostMemoryBroker(budget_units=10 * bpp)
+    engines = {rid: ServeEngine(cfg, params, spec, mode=mode,
+                                keep_alive=3.0, seed=i, broker=broker,
+                                replica_id=rid)
+               for i, rid in enumerate(("A", "B"))}
+    broker.check_invariants()
+    reqs = _cluster_reqs()
+    sim = ClusterSim(engines, Router(route_fn=lambda r, e:
+                                     "B" if r.rid.startswith("b") else "A"),
+                     broker)
+    m = sim.run(reqs, max_virtual_s=2000)
+    broker.check_invariants()
+    for e in engines.values():
+        e.arena.manager.check_invariants()
+    assert m["completed"] == len(reqs)
+    assert m["killed"] == 0
+    rep = m["broker"]
+    assert rep["steals"] > 0                           # pressure engaged B
+    if mode == "hotmem":
+        assert rep["by_mode"][mode]["migrated_bytes"] == 0
+    else:
+        assert rep["by_mode"][mode]["migrated_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_router_spreads_shared_trace(setup):
+    """Least-loaded routing over a shared trace uses both replicas."""
+    from repro.serving.engine import ServeEngine
+    cfg, params, spec = setup
+    bpp = spec.blocks_per_partition
+    broker = HostMemoryBroker(budget_units=16 * bpp)
+    engines = {rid: ServeEngine(cfg, params, spec, mode="hotmem",
+                                keep_alive=2.0, seed=i, broker=broker,
+                                replica_id=rid)
+               for i, rid in enumerate(("A", "B"))}
+    reqs = _cluster_reqs()
+    sim = ClusterSim(engines, Router("least_loaded"), broker)
+    m = sim.run(reqs, max_virtual_s=2000)
+    assert m["completed"] == len(reqs)
+    assert set(m["routed"]) == {"A", "B"}              # both replicas used
+    assert min(m["routed"].values()) > 0
+
+
+@pytest.mark.slow
+def test_hotmem_steal_evicts_warm_suffix(setup):
+    """A hotmem victim must extend the free *suffix* by recycling the warm
+    containers on its high rows (a low free row alone cannot be unplugged),
+    and must stop at an active row without wasting warm state below it."""
+    from repro.serving.engine import ServeEngine
+    cfg, params, spec = setup
+    eng = ServeEngine(cfg, params, spec, mode="hotmem", keep_alive=100.0,
+                      seed=0, prewarm=False)
+    mgr = eng.arena.manager
+    mgr.plug(2)                                  # ladder start 2 -> 4 rows
+    for i in range(4):
+        assert eng.arena.admit(f"r{i}") == i
+    eng.arena.finish("r0")                       # free = {0}: low row only
+    eng.warm["cnn"] = [(0.0, "r1", 1), (0.0, "r2", 2), (0.0, "r3", 3)]
+    bpp = spec.blocks_per_partition
+    got, ev = eng.reclaim_for_broker(2 * bpp)
+    assert got == 2 * bpp                        # suffix rows 3,2 freed
+    assert ev.migrated_bytes == 0
+    assert mgr.plugged == 2
+    assert [row for (_, _, row) in eng.warm["cnn"]] == [1]   # r1 survives
+    mgr.check_invariants()
+
+
+class _FakeClock:
+    """Deterministic stand-in for ``time``: each perf_counter() call
+    advances a fixed step, so the engine's virtual clock (and hence its
+    entire schedule) replays identically run-to-run."""
+
+    def __init__(self, step=1e-4):
+        self._t = 0.0
+        self._step = step
+
+    def perf_counter(self):
+        self._t += self._step
+        return self._t
+
+
+@pytest.mark.slow
+def test_single_replica_regression(setup, monkeypatch):
+    """The broker refactor must not change standalone engine behavior:
+    identical metrics with the default (unmetered) broker and with an
+    uncontended HostMemoryBroker, for a fixed seed/trace (under a
+    deterministic clock, since the virtual timebase is wall-measured)."""
+    import repro.core.elastic as elastic_mod
+    import repro.core.hotmem as hotmem_mod
+    import repro.core.vanilla as vanilla_mod
+    import repro.serving.engine as engine_mod
+    from repro.serving.engine import ServeEngine
+    from repro.serving.request import PROFILES, Request
+    from repro.serving.tracegen import assign_profiles, bursty_trace
+    cfg, params, spec = setup
+
+    def run(broker):
+        clock = _FakeClock()
+        for mod in (engine_mod, elastic_mod, hotmem_mod, vanilla_mod):
+            monkeypatch.setattr(mod, "time", clock)
+        arr = bursty_trace(8.0, 0.8, burst_x=5.0, burst_at=(0.0,),
+                           burst_len=2.0, quiet_after=4.0, seed=11)
+        reqs = [Request(rid=f"s{i}", profile=p, submit_s=t)
+                for i, (t, p) in enumerate(
+                    assign_profiles(arr, PROFILES, 11))]
+        eng = ServeEngine(cfg, params, spec, mode="hotmem", keep_alive=2.0,
+                          seed=0, broker=broker)
+        return eng.run(reqs, max_virtual_s=2000)
+
+    base = run(None)                                   # AlwaysGrantBroker
+    solo = HostMemoryBroker(
+        budget_units=spec.n_partitions * spec.blocks_per_partition)
+    m = run(solo)
+    for key in ("completed", "killed", "reclaim_events", "reclaimed_bytes",
+                "migrated_bytes", "decode_steps", "latency_p50",
+                "latency_p99"):
+        assert m[key] == base[key], key
+    assert not solo.steal_log                          # nothing to steal
+    solo.check_invariants()
