@@ -8,6 +8,7 @@ Each returns (name, us_per_call, derived) rows for benchmarks.run.
 from __future__ import annotations
 
 import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -248,49 +249,131 @@ def kernel_layout_cost() -> list[Row]:
 
 
 def cluster_reclaim() -> list[Row]:
-    """Host-level steal (paper §2 lifted to the cluster): two replicas
-    share one ``HostMemoryBroker`` budget below 2 full arenas.  Replica B
-    serves early load then goes quiet (warm containers idling); replica
-    A's burst then needs memory the free pool can't cover, so the broker
-    reclaims from the idlest VM — B.  Reports per-mode steal latency and
-    migrated bytes: hotmem steals are metadata-only (0 bytes moved),
-    vanilla steals pay real migration copies."""
+    """Host-level steal (paper §2 lifted to the cluster), sync vs async.
+
+    Trace rows: two replicas share one ``HostMemoryBroker`` budget below 2
+    full arenas.  Replica B serves early load then goes quiet (warm
+    containers idling); replica A's burst then needs memory the free pool
+    can't cover, so the broker reclaims from the idlest VM — B — either
+    inline (sync: A serializes behind B's unplug) or via reclaim orders B
+    drains between its ticks (async: A's stall is zero by construction).
+    The value column is the requester-visible stall p99 in us — the
+    paper's tail-latency contrast lifted to the host control plane.
+
+    Pipeline rows: a scripted steal with identical demand on both paths —
+    A's burst forces exactly one 6-partition steal from B — so the total
+    units stolen are equal by construction and only the stall and its
+    placement differ; ``overlap_decodes`` counts A's decode steps that ran
+    while B's reclaim order was still draining (0 for sync: the reclaim
+    completed inside A's plug request before A could decode again)."""
     rows: list[Row] = []
     for mode in ("hotmem", "vanilla"):
+        for async_mode in (False, True):
+            cfg, spec = _cfg_spec(partition_tokens=128, n_partitions=8)
+            params = M.init_params(cfg, jax.random.PRNGKey(0))
+            bpp = spec.blocks_per_partition
+            broker = HostMemoryBroker(budget_units=10 * bpp,
+                                      async_reclaim=async_mode)
+            engines = {rid: ServeEngine(cfg, params, spec, mode=mode,
+                                        keep_alive=3.0, seed=i,
+                                        broker=broker, replica_id=rid)
+                       for i, rid in enumerate(("A", "B"))}
+            quiet = bursty_trace(6.0, 0.9, burst_x=1.0, burst_len=0.0,
+                                 seed=2)
+            burst = [4.0 + t for t in bursty_trace(
+                4.0, 3.0, burst_x=3.0, burst_at=(0.0,), burst_len=2.0,
+                seed=3)]
+            reqs = [Request(rid=f"b{i}", profile=p, submit_s=t)
+                    for i, (t, p) in enumerate(
+                        assign_profiles(quiet, PROFILES, 2))]
+            reqs += [Request(rid=f"a{i}", profile=p, submit_s=t)
+                     for i, (t, p) in enumerate(
+                         assign_profiles(burst, PROFILES, 3))]
+            sim = ClusterSim(
+                engines,
+                Router(route_fn=lambda r, e:
+                       "B" if r.rid.startswith("b") else "A"),
+                broker)
+            m = sim.run(reqs, max_virtual_s=2000)
+            broker.check_invariants()
+            rep = m["broker"]["by_mode"].get(mode, {})
+            stalls = broker.request_stalls or [0.0]
+            p50 = float(np.percentile(stalls, 50)) * 1e6
+            p99 = float(np.percentile(stalls, 99)) * 1e6
+            tag = "async" if async_mode else "sync"
+            rows.append((
+                f"cluster_reclaim/{mode}/{tag}", p99,
+                f"stall_p50_us={p50:.0f} stall_p99_us={p99:.0f} "
+                f"steal_wall_us={rep.get('wall_seconds', 0.0) * 1e6:.0f} "
+                f"steals={rep.get('steals', 0)} "
+                f"stolen_units={rep.get('units', 0)} "
+                f"migrated_B={rep.get('migrated_bytes', 0)} "
+                f"lat_p99_us={(m['latency_p99'] or 0) * 1e6:.0f} "
+                f"completed={m['completed']}/{len(reqs)}"))
+        rows += _steal_pipeline_rows(mode)
+    return rows
+
+
+def _steal_pipeline_rows(mode) -> list[Row]:
+    """Scripted steal with identical demand for sync and async (see
+    ``cluster_reclaim``): equal units stolen, only the stall differs."""
+    rows: list[Row] = []
+    stolen = {}
+    for async_mode in (False, True):
         cfg, spec = _cfg_spec(partition_tokens=128, n_partitions=8)
         params = M.init_params(cfg, jax.random.PRNGKey(0))
         bpp = spec.blocks_per_partition
-        broker = HostMemoryBroker(budget_units=10 * bpp)
-        engines = {rid: ServeEngine(cfg, params, spec, mode=mode,
-                                    keep_alive=3.0, seed=i, broker=broker,
-                                    replica_id=rid)
-                   for i, rid in enumerate(("A", "B"))}
-        quiet = bursty_trace(6.0, 0.9, burst_x=1.0, burst_len=0.0, seed=2)
-        burst = [4.0 + t for t in bursty_trace(
-            4.0, 3.0, burst_x=3.0, burst_at=(0.0,), burst_len=2.0, seed=3)]
-        reqs = [Request(rid=f"b{i}", profile=p, submit_s=t)
-                for i, (t, p) in enumerate(
-                    assign_profiles(quiet, PROFILES, 2))]
-        reqs += [Request(rid=f"a{i}", profile=p, submit_s=t)
-                 for i, (t, p) in enumerate(
-                     assign_profiles(burst, PROFILES, 3))]
-        sim = ClusterSim(
-            engines,
-            Router(route_fn=lambda r, e:
-                   "B" if r.rid.startswith("b") else "A"),
-            broker)
-        m = sim.run(reqs, max_virtual_s=2000)
+        broker = HostMemoryBroker(budget_units=10 * bpp,
+                                  async_reclaim=async_mode)
+        mk = lambda rid, seed: ServeEngine(
+            cfg, params, spec, mode=mode, keep_alive=1e9, headroom=0,
+            seed=seed, prewarm=False, broker=broker, replica_id=rid)
+        A, B = mk("A", 0), mk("B", 1)
+        # B grows to the full arena and parks 8 kept-alive containers
+        B.arena.plug(6 if mode == "hotmem" else
+                     6 * spec.blocks_per_partition)
+        B._sync_rows(B._units())
+        for i in range(8):
+            row = B.arena.admit(f"w{i}")
+            # a full-partition footprint, so the drain frees exactly one
+            # container per partition in BOTH layouts (vanilla otherwise
+            # drains its lazy-allocation headroom first and legitimately
+            # re-grows afterwards, breaking the equal-demand construction)
+            B.arena.on_tokens(f"w{i}", spec.partition_tokens)
+            B.warm.setdefault("cnn", []).append(
+                (0.0, f"w{i}", row if row is not None else i))
+        # A's burst: 5 invocations -> demand 5 -> bucket 8; the free pool
+        # is empty, so A's resize must take 6 partitions from B
+        for i in range(5):
+            A.submit(Request(rid=f"q{i}", profile=PROFILES["cnn"],
+                             submit_s=0.0))
+        empty_a, empty_b = deque(), deque()
+        overlap = 0
+        for _ in range(3000):
+            pend_before = broker.pending_units()
+            A._tick(empty_a)
+            if pend_before > 0 and A.events and \
+                    A.events[-1].kind == "decode":
+                overlap += 1
+            if broker.pending_units() > 0 or B._reclaim_orders:
+                B._tick(empty_b)
+            if not A.active and not A.pending \
+                    and broker.pending_units() == 0:
+                break
         broker.check_invariants()
-        rep = m["broker"]["by_mode"].get(mode, {})
-        steals = rep.get("steals", 0)
-        steal_us = rep.get("wall_seconds", 0.0) * 1e6 / max(steals, 1)
+        stalls = broker.request_stalls or [0.0]
+        p99 = float(np.percentile(stalls, 99)) * 1e6
+        tag = "async" if async_mode else "sync"
+        stolen[tag] = sum(r.units for r in broker.steal_log)
         rows.append((
-            f"cluster_reclaim/{mode}", steal_us,
-            f"steals={steals} "
-            f"stolen_units={rep.get('units', 0)} "
-            f"migrated_B={rep.get('migrated_bytes', 0)} "
-            f"reclaimed_B={rep.get('reclaimed_bytes', 0)} "
-            f"completed={m['completed']}/{len(reqs)}"))
+            f"cluster_reclaim_pipeline/{mode}/{tag}", p99,
+            f"stall_p99_us={p99:.0f} "
+            f"steal_wall_us={sum(r.wall_seconds for r in broker.steal_log) * 1e6:.0f} "
+            f"stolen_units={stolen[tag]} "
+            f"overlap_decodes={overlap} "
+            f"completed={len(A.done)}"))
+    assert stolen["sync"] == stolen["async"], \
+        f"steal totals diverged: {stolen}"
     return rows
 
 

@@ -1,10 +1,10 @@
 """Multi-replica host layer: broker (hypervisor role), router (FaaS
 front-end role), and the deterministic co-simulation that couples N
 ``ServeEngine`` replicas over one host memory budget."""
-from repro.cluster.host import (AlwaysGrantBroker, HostMemoryBroker,
-                                MemoryBroker, StealRecord)
+from repro.cluster.host import (AlwaysGrantBroker, Grant, HostMemoryBroker,
+                                MemoryBroker, ReclaimOrder, StealRecord)
 from repro.cluster.router import Router
 from repro.cluster.sim import ClusterSim
 
-__all__ = ["AlwaysGrantBroker", "HostMemoryBroker", "MemoryBroker",
-           "StealRecord", "Router", "ClusterSim"]
+__all__ = ["AlwaysGrantBroker", "Grant", "HostMemoryBroker", "MemoryBroker",
+           "ReclaimOrder", "StealRecord", "Router", "ClusterSim"]

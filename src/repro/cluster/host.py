@@ -7,27 +7,69 @@ plane that arbitrates that budget; its verbs map onto the paper's terms:
   broker verb               paper mechanism
   -----------------------   --------------------------------------------
   ``register``              VM boot: the guest's initial memory plug
-  ``request_units``         virtio-mem **plug** request (guest asks the
-                            hypervisor for more memory blocks)
+  ``request_grant``         virtio-mem **plug** request (guest asks the
+                            hypervisor for more memory blocks); returns a
+                            ``Grant`` — immediately-filled pool units plus
+                            a *pending* remainder fed by reclaim orders
   ``release_units``         virtio-mem **unplug** completion (guest hands
                             reclaimed blocks back to the host)
-  ``_reclaim_from_idlest``  host memory pressure: the hypervisor shrinks
-                            the idlest VM (Squeezy's sub-second reclaim is
-                            what makes this cheap enough to do online)
+  ``ReclaimOrder``          host memory pressure, asynchronously: the
+                            hypervisor *asks* the idlest VMs to shrink
+                            (Squeezy's sub-second reclaim is what makes
+                            draining an order between decode steps cheap)
+  ``fulfill_order``         a victim's partial unplug against its order;
+                            the freed units land in the grant's escrow
+  ``claim_grant``           the requester absorbs escrowed units at its
+                            next tick (grant completion)
   unit (= one block)        a Linux 128 MiB memory block — here one
                             ``block_tokens`` slab of arena state
+
+Grant / ReclaimOrder lifecycle (async mode)::
+
+    requester                broker                    victim
+    ---------                ------                    ------
+    request_grant(want) ->   grant from free pool
+                             issue ReclaimOrder(s) --> order_sink(order)
+    <- Grant(granted,                                  ... decodes ...
+             pending)                                  partial unplug
+    ... decodes ...          fulfill_order(k)      <-- (tick boundary)
+                             pending -= k
+                             available += k  (escrow)
+    claim_grant() ------->   available -> granted
+    absorb rows              ...                       ... drains rest ...
+                             (victim finishing naturally routes its
+                              release_units into the open order instead
+                              of the free pool — no double release; an
+                              unfulfillable remainder is cancel_order'd)
+
+In sync mode (``async_reclaim=False``, the pre-async behavior kept for the
+benchmark contrast) ``request_grant`` runs the victims' reclaim callbacks
+inline and reports the victim-side wall it serialized behind as
+``Grant.stall_seconds`` — the requester-visible stall the async path
+eliminates.
 
 A unit is a *block* (``ArenaSpec.block_tokens`` worth of state), the finest
 granularity both managers share; HotMem replicas convert partitions to
 blocks at the boundary (1 partition = ``blocks_per_partition`` units).
 
 Conservation invariant (the test suite's anchor): at all times
-``free_units + sum(granted.values()) == budget_units`` — the host never
-double-grants a unit and never leaks one.
+``free_units + sum(granted.values()) + escrow == budget_units`` where
+``escrow`` is the pending-delivery pool (units victims already drained into
+open grants that their requesters have not claimed yet) — the host never
+double-grants a unit and never leaks one, even mid-order.
+
+Pressure signal: ``pressure()`` = outstanding ordered-but-undrained units /
+budget; ``open_order_units(rid)`` is the per-victim view the router's
+power-of-two policy uses to avoid replicas that are mid-reclaim.
 
 ``AlwaysGrantBroker`` is the single-replica degenerate case: an unmetered
 host that grants every request, so a lone ``ServeEngine`` behaves exactly
 as it did before the broker existed.
+
+The broker's clock is injectable (``clock=``/``set_clock``): standalone it
+stamps with ``time.perf_counter``; under ``ClusterSim`` the sim passes its
+deterministic virtual clock so ``StealRecord.wall_seconds`` and order
+timestamps replay identically for a fixed (trace, seed).
 """
 from __future__ import annotations
 
@@ -52,6 +94,57 @@ class StealRecord:
     reclaimed_bytes: int
     migrated_bytes: int          # 0 for hotmem victims by construction
     mode: Optional[str] = None   # victim's manager mode
+    natural: bool = False        # filled by the victim's own release, not
+    #                              an explicit order drain (zero extra wall)
+
+
+@dataclasses.dataclass
+class ReclaimOrder:
+    """An asynchronous shrink request from host to victim VM.  The victim
+    drains it incrementally at its own tick boundaries (``fulfill_order``)
+    or lets natural releases cover it; an unfulfillable remainder is
+    canceled (``cancel_order``)."""
+    order_id: int
+    victim: str
+    requester: str
+    units: int                   # blocks ordered
+    filled: int = 0              # blocks drained so far
+    canceled: int = 0            # blocks the victim could not supply
+    issued_at: float = 0.0       # broker-clock timestamp
+    closed_at: Optional[float] = None
+
+    @property
+    def remaining(self) -> int:
+        return self.units - self.filled - self.canceled
+
+    @property
+    def open(self) -> bool:
+        return self.remaining > 0
+
+
+@dataclasses.dataclass
+class Grant:
+    """The result of one plug request.  ``granted`` units are usable
+    immediately; ``pending`` arrive later as reclaim orders drain, landing
+    in ``available`` (escrow) until the requester ``claim_grant``s them."""
+    replica_id: str
+    requested: int
+    granted: int = 0             # filled from the free pool, already owned
+    pending: int = 0             # owed by open reclaim orders
+    available: int = 0           # escrow: drained, awaiting claim
+    claimed: int = 0             # escrow already delivered
+    order_ids: list[int] = dataclasses.field(default_factory=list)
+    stall_seconds: float = 0.0   # sync mode: victim reclaim wall the
+    #                              requester serialized behind (async: 0)
+
+    @property
+    def done(self) -> bool:
+        """No more units will arrive (escrow may still await a claim)."""
+        return self.pending == 0
+
+    @property
+    def fulfilled(self) -> int:
+        return self.granted + self.claimed + self.available + self.pending
 
 
 class MemoryBroker:
@@ -60,14 +153,31 @@ class MemoryBroker:
     def register(self, replica_id: str, initial_units: int, *,
                  reclaim: Optional[ReclaimFn] = None,
                  load: Optional[Callable[[], int]] = None,
-                 mode: Optional[str] = None) -> None:
+                 mode: Optional[str] = None,
+                 order_sink: Optional[Callable[[ReclaimOrder], None]] = None,
+                 ) -> None:
         raise NotImplementedError
 
     def request_units(self, replica_id: str, want: int) -> int:
         raise NotImplementedError
 
+    def request_grant(self, replica_id: str, want: int) -> Grant:
+        """Grant protocol: brokers without async reclaim wrap the legacy
+        blocking call in an already-complete ``Grant``."""
+        return Grant(replica_id=replica_id, requested=max(want, 0),
+                     granted=self.request_units(replica_id, want))
+
     def release_units(self, replica_id: str, units: int) -> None:
         raise NotImplementedError
+
+    def claim_grant(self, grant: Grant) -> int:
+        """Deliver escrowed units to the requester; 0 for sync brokers."""
+        return 0
+
+    def abandon_grant(self, grant: Grant) -> int:
+        """Cancel a pending grant's unfilled remainder; no-op for brokers
+        without the async order plane."""
+        return 0
 
 
 class AlwaysGrantBroker(MemoryBroker):
@@ -86,25 +196,43 @@ class AlwaysGrantBroker(MemoryBroker):
 
 class HostMemoryBroker(MemoryBroker):
     """Fixed-budget host arbiter: grant on demand, reclaim-from-idlest
-    under pressure."""
+    under pressure — synchronously (legacy) or via async reclaim orders."""
 
-    def __init__(self, budget_units: int):
+    def __init__(self, budget_units: int, *, async_reclaim: bool = False,
+                 clock: Optional[Callable[[], float]] = None):
         assert budget_units > 0
         self.budget_units = budget_units
         self.free_units = budget_units
+        self.async_reclaim = async_reclaim
+        self._clock = clock if clock is not None else time.perf_counter
         self.granted: dict[str, int] = {}
         self._reclaim: dict[str, ReclaimFn] = {}
         self._load: dict[str, Callable[[], int]] = {}
         self._mode: dict[str, Optional[str]] = {}
+        self._order_sink: dict[str, Callable[[ReclaimOrder], None]] = {}
+        self.orders: dict[int, ReclaimOrder] = {}
+        self._victim_orders: dict[str, list[int]] = {}   # open orders only
+        self._order_grant: dict[int, Grant] = {}
+        self.grants: list[Grant] = []                    # open grants
+        self._next_order = 0
         self.steal_log: list[StealRecord] = []
         self.grant_calls = 0
         self.denied_units = 0        # requested-but-ungranted (pressure)
+        self.request_stalls: list[float] = []   # per pressured request: the
+        #                                         requester-visible stall
+
+    def set_clock(self, clock: Callable[[], float]) -> None:
+        """Inject a (virtual) clock; ``ClusterSim`` passes its deterministic
+        timebase so steal records replay identically."""
+        self._clock = clock
 
     # ----------------------------------------------------------- lifecycle
     def register(self, replica_id: str, initial_units: int, *,
                  reclaim: Optional[ReclaimFn] = None,
                  load: Optional[Callable[[], int]] = None,
-                 mode: Optional[str] = None) -> None:
+                 mode: Optional[str] = None,
+                 order_sink: Optional[Callable[[ReclaimOrder], None]] = None,
+                 ) -> None:
         """VM boot: carve the replica's initial plug out of the free pool."""
         assert replica_id not in self.granted, replica_id
         assert initial_units <= self.free_units, \
@@ -116,58 +244,237 @@ class HostMemoryBroker(MemoryBroker):
             self._reclaim[replica_id] = reclaim
         if load is not None:
             self._load[replica_id] = load
+        if order_sink is not None:
+            self._order_sink[replica_id] = order_sink
         self._mode[replica_id] = mode
 
     # --------------------------------------------------------- plug/unplug
     def request_units(self, replica_id: str, want: int) -> int:
-        """virtio-mem plug: grant up to ``want`` units, stealing from the
-        idlest other replicas if the free pool can't cover it."""
+        """Legacy blocking plug: grant up to ``want`` units now.  A legacy
+        caller cannot claim async fills, so any orders the request issued
+        are canceled immediately — otherwise their proceeds would strand
+        in escrow forever, silently shrinking the usable budget."""
+        g = self.request_grant(replica_id, want)
+        for oid in list(g.order_ids):
+            self.cancel_order(oid)
+        return g.granted
+
+    def request_grant(self, replica_id: str, want: int) -> Grant:
+        """virtio-mem plug: fill from the free pool immediately; cover any
+        deficit by reclaim — inline (sync) or via orders (async)."""
         assert replica_id in self.granted, replica_id
+        g = Grant(replica_id=replica_id, requested=max(want, 0))
         if want <= 0:
-            return 0
+            return g
         self.grant_calls += 1
-        if self.free_units < want:
-            self._reclaim_from_idlest(replica_id, want - self.free_units)
-        g = min(want, self.free_units)
-        self.free_units -= g
-        self.granted[replica_id] += g
-        self.denied_units += want - g
+        take = min(want, self.free_units)
+        self.free_units -= take
+        self.granted[replica_id] += take
+        g.granted = take
+        deficit = want - take
+        if deficit <= 0:
+            return g
+        if self.async_reclaim:
+            issued = self._issue_orders(replica_id, deficit, g)
+            g.pending = issued
+            self.denied_units += deficit - issued
+            if g.pending:
+                self.grants.append(g)
+            self.request_stalls.append(0.0)     # requester never blocks
+        else:
+            stall = self._reclaim_from_idlest(replica_id, deficit)
+            g.stall_seconds = stall
+            self.request_stalls.append(stall)
+            take2 = min(deficit, self.free_units)
+            self.free_units -= take2
+            self.granted[replica_id] += take2
+            g.granted += take2
+            self.denied_units += deficit - take2
         return g
 
     def release_units(self, replica_id: str, units: int) -> None:
-        """virtio-mem unplug completion: units return to the host pool."""
+        """virtio-mem unplug completion.  A victim with open reclaim orders
+        routes its released units into them first (a victim finishing
+        naturally *is* the reclaim — crediting the free pool too would
+        double-release); only the excess reaches the host pool."""
         if units <= 0:
             return
         assert self.granted.get(replica_id, 0) >= units, \
             f"{replica_id} returning {units} units it was never granted"
-        self.granted[replica_id] -= units
-        self.free_units += units
+        for oid in list(self._victim_orders.get(replica_id, ())):
+            if units <= 0:
+                break
+            o = self.orders[oid]
+            k = min(units, o.remaining)
+            if k > 0:
+                self._apply_fill(o, k, wall=0.0, ev=None, natural=True)
+                units -= k
+        if units > 0:
+            self.granted[replica_id] -= units
+            self.free_units += units
 
-    def _reclaim_from_idlest(self, requester: str, deficit: int) -> None:
-        """Host pressure: shrink other replicas, idlest first (fewest
-        in-flight invocations — the VM whose reclaim disturbs least)."""
+    # --------------------------------------------------- async order plane
+    def _issue_orders(self, requester: str, deficit: int, grant: Grant
+                      ) -> int:
+        """Spread ``deficit`` across reclaim orders to the idlest victims
+        (fewest in-flight invocations), capped by what each victim holds
+        beyond units already ordered from it."""
+        victims = sorted(
+            (r for r in self.granted
+             if r != requester and r in self._order_sink),
+            key=lambda r: (self._load[r]() if r in self._load else 0, r))
+        issued = 0
+        now = self._clock()
+        for v in victims:
+            if deficit <= 0:
+                break
+            cap = self.granted[v] - self.open_order_units(v)
+            k = min(deficit, cap)
+            if k <= 0:
+                continue
+            order = ReclaimOrder(order_id=self._next_order, victim=v,
+                                 requester=requester, units=k,
+                                 issued_at=now)
+            self._next_order += 1
+            self.orders[order.order_id] = order
+            self._victim_orders.setdefault(v, []).append(order.order_id)
+            self._order_grant[order.order_id] = grant
+            grant.order_ids.append(order.order_id)
+            deficit -= k
+            issued += k
+            self._order_sink[v](order)
+        return issued
+
+    def fulfill_order(self, order_id: int, units: int,
+                      ev: Optional[ReclaimEvent] = None) -> int:
+        """Victim-side partial drain: move up to ``units`` blocks from the
+        victim's grant into the order's escrow.  Returns blocks accepted
+        (the victim releases any unplugged excess normally)."""
+        o = self.orders[order_id]
+        k = min(units, o.remaining, self.granted[o.victim])
+        if k <= 0:
+            return 0
+        self._apply_fill(o, k, wall=ev.wall_seconds if ev is not None
+                         else 0.0, ev=ev, natural=False)
+        return k
+
+    def _apply_fill(self, o: ReclaimOrder, k: int, *, wall: float,
+                    ev: Optional[ReclaimEvent], natural: bool) -> None:
+        g = self._order_grant[o.order_id]
+        self.granted[o.victim] -= k
+        o.filled += k
+        g.pending -= k
+        g.available += k
+        self.steal_log.append(StealRecord(
+            requester=o.requester, victim=o.victim, units=k,
+            wall_seconds=wall,
+            reclaimed_bytes=ev.reclaimed_bytes if ev is not None else 0,
+            migrated_bytes=ev.migrated_bytes if ev is not None else 0,
+            mode=self._mode.get(o.victim), natural=natural))
+        if not o.open:
+            self._close_order(o)
+
+    def cancel_order(self, order_id: int, units: Optional[int] = None
+                     ) -> int:
+        """Victim abandons (part of) an order it cannot fulfill — e.g. its
+        arena is fully drained, or it finished naturally and released its
+        memory before the order could be serviced.  The requester's pending
+        shrinks; it may re-request later.  Returns units canceled."""
+        o = self.orders[order_id]
+        k = o.remaining if units is None else min(units, o.remaining)
+        if k <= 0:
+            return 0
+        g = self._order_grant[o.order_id]
+        o.canceled += k
+        g.pending -= k
+        self.denied_units += k
+        if not o.open:
+            self._close_order(o)
+        self._prune_grant(g)
+        return k
+
+    def _close_order(self, o: ReclaimOrder) -> None:
+        o.closed_at = self._clock()
+        vlist = self._victim_orders.get(o.victim)
+        if vlist and o.order_id in vlist:
+            vlist.remove(o.order_id)
+
+    def _prune_grant(self, g: Grant) -> None:
+        if g.done and g.available == 0 and g in self.grants:
+            self.grants.remove(g)
+
+    def abandon_grant(self, grant: Grant) -> int:
+        """Requester gives up on a pending grant (its demand vanished, or
+        it is shutting down): cancel the unfilled remainder of the backing
+        orders.  Already-escrowed units stay claimable.  Returns units
+        canceled."""
+        n = 0
+        for oid in list(grant.order_ids):
+            if self.orders[oid].open:
+                n += self.cancel_order(oid)
+        return n
+
+    def claim_grant(self, grant: Grant) -> int:
+        """Requester-side grant completion: absorb escrowed units (the
+        engine then grows its rows at its own tick boundary)."""
+        k = grant.available
+        if k <= 0:
+            self._prune_grant(grant)
+            return 0
+        grant.available = 0
+        grant.claimed += k
+        self.granted[grant.replica_id] += k
+        self._prune_grant(grant)
+        return k
+
+    # ----------------------------------------------------- pressure signal
+    def open_order_units(self, replica_id: str) -> int:
+        """Blocks this replica still owes to open reclaim orders — the
+        router's drain-awareness signal."""
+        return sum(self.orders[oid].remaining
+                   for oid in self._victim_orders.get(replica_id, ()))
+
+    def pending_units(self) -> int:
+        return sum(o.remaining for o in self.orders.values())
+
+    def escrow_units(self) -> int:
+        return sum(g.available for g in self.grants)
+
+    def pressure(self) -> float:
+        """Outstanding pending units / budget: how far the host is from
+        satisfying every open plug request."""
+        return self.pending_units() / self.budget_units
+
+    # ------------------------------------------------- sync reclaim (legacy)
+    def _reclaim_from_idlest(self, requester: str, deficit: int) -> float:
+        """Host pressure, synchronous: shrink other replicas inline, idlest
+        first (fewest in-flight invocations — the VM whose reclaim disturbs
+        least).  Returns the victim-side wall the requester waited for."""
         victims = sorted(
             (r for r in self.granted
              if r != requester and r in self._reclaim),
             key=lambda r: (self._load[r]() if r in self._load else 0, r))
+        stall = 0.0
         for v in victims:
             if deficit <= 0:
                 break
-            t0 = time.perf_counter()
+            t0 = self._clock()
             got, ev = self._reclaim[v](deficit)
-            wall = time.perf_counter() - t0
+            wall = ev.wall_seconds if ev is not None else self._clock() - t0
             if got <= 0:
                 continue
             assert got <= self.granted[v]
             self.granted[v] -= got
             self.free_units += got
             deficit -= got
+            stall += wall
             self.steal_log.append(StealRecord(
                 requester=requester, victim=v, units=got,
-                wall_seconds=ev.wall_seconds if ev is not None else wall,
+                wall_seconds=wall,
                 reclaimed_bytes=ev.reclaimed_bytes if ev is not None else 0,
                 migrated_bytes=ev.migrated_bytes if ev is not None else 0,
                 mode=self._mode.get(v)))
+        return stall
 
     # -------------------------------------------------------------- report
     def report(self) -> dict[str, Any]:
@@ -188,8 +495,14 @@ class HostMemoryBroker(MemoryBroker):
             "free_units": self.free_units,
             "granted": dict(self.granted),
             "steals": len(self.steal_log),
+            "stolen_units": sum(r.units for r in self.steal_log),
             "grant_calls": self.grant_calls,
             "denied_units": self.denied_units,
+            "async": self.async_reclaim,
+            "orders": len(self.orders),
+            "pending_units": self.pending_units(),
+            "escrow_units": self.escrow_units(),
+            "pressure": self.pressure(),
             "by_mode": by_mode,
         }
 
@@ -197,5 +510,18 @@ class HostMemoryBroker(MemoryBroker):
     def check_invariants(self) -> None:
         assert self.free_units >= 0
         assert all(g >= 0 for g in self.granted.values())
-        assert self.free_units + sum(self.granted.values()) \
+        escrow = self.escrow_units()
+        assert escrow >= 0
+        assert self.free_units + sum(self.granted.values()) + escrow \
             == self.budget_units, "host units leaked or double-granted"
+        for o in self.orders.values():
+            assert 0 <= o.filled + o.canceled <= o.units, o
+            if o.open:
+                assert o.order_id in self._victim_orders.get(o.victim, ()), o
+        for g in self.grants:
+            assert g.pending >= 0 and g.available >= 0, g
+            assert g.fulfilled <= g.requested, g
+        # every pending unit is backed by exactly one open order
+        assert sum(g.pending for g in self.grants) \
+            == sum(o.remaining for o in self.orders.values()), \
+            "pending units not backed by open orders"

@@ -9,30 +9,54 @@ invocation must be assigned to one.  Policies:
                         container for the same function profile, so the
                         invocation skips prefill (the paper's warm-start
                         fast path); falls back to least-loaded.
+  * ``power_of_two``  — power-of-two-choices: sample two replicas (seeded
+                        rng, deterministic for a fixed trace) and take the
+                        less loaded — but first avoid the one that is
+                        mid-reclaim (open ``ReclaimOrder``s reported by
+                        the broker's pressure signal): routing onto a
+                        draining victim both slows its drain and lands
+                        the invocation on a shrinking arena.
 
 Ties break on replica id, so routing is deterministic for a fixed trace.
 A custom ``route_fn(req, engines) -> replica_id`` overrides the policy
 (benchmarks use this to pin tenants to replicas).
+
+``broker`` (optional) supplies the drain-awareness signal
+(``open_order_units``); ``ClusterSim`` wires its broker in automatically
+when the router was constructed without one.
 """
 from __future__ import annotations
 
+import random
 from typing import Callable, Optional
 
-POLICIES = ("least_loaded", "warm_affinity")
+POLICIES = ("least_loaded", "warm_affinity", "power_of_two")
 
 
 class Router:
     def __init__(self, policy: str = "least_loaded",
-                 route_fn: Optional[Callable] = None):
+                 route_fn: Optional[Callable] = None,
+                 broker=None, seed: int = 0):
         assert route_fn is not None or policy in POLICIES, policy
         self.policy = policy
         self.route_fn = route_fn
+        self.broker = broker
+        self._rng = random.Random(seed)
         self.routed: dict[str, int] = {}      # replica -> #assigned
         self.warm_hits = 0
+        self.drain_avoided = 0                # times p2c dodged a victim
 
     def _score(self, rid: str, engines, backlog) -> tuple[int, str]:
         load = engines[rid].load() + (backlog or {}).get(rid, 0)
         return (load, rid)
+
+    def _draining(self, rid: str) -> int:
+        """Blocks ``rid`` still owes to open reclaim orders (0 without a
+        broker or for brokers without the async order plane)."""
+        if self.broker is None:
+            return 0
+        fn = getattr(self.broker, "open_order_units", None)
+        return fn(rid) if fn is not None else 0
 
     def route(self, req, engines: dict, backlog: Optional[dict] = None
               ) -> str:
@@ -50,6 +74,16 @@ class Router:
                     rid = min(warm,
                               key=lambda r: self._score(r, engines, backlog))
                     self.warm_hits += 1
+            elif self.policy == "power_of_two":
+                ids = sorted(engines)
+                pair = ids if len(ids) <= 2 else self._rng.sample(ids, 2)
+                rid = min(pair, key=lambda r: (
+                    1 if self._draining(r) else 0,
+                    self._score(r, engines, backlog)))
+                by_load = min(pair,
+                              key=lambda r: self._score(r, engines, backlog))
+                if rid != by_load:       # the drain tiebreak changed the pick
+                    self.drain_avoided += 1
             if rid is None:
                 rid = min(engines,
                           key=lambda r: self._score(r, engines, backlog))

@@ -7,11 +7,21 @@ only once every busy replica has caught up to its submit time — so routing
 decisions see the cluster state "at" the arrival instant, and a fixed
 (trace, seed) pair replays identically.
 
-The broker couples the replicas: a loaded replica's plug request may
-synchronously shrink an idle one (``HostMemoryBroker._reclaim_from_idlest``
--> victim's ``reclaim_for_broker``), charging the victim's clock with the
-reclaim stall — hotmem's is metadata-only, vanilla's includes migration
-copies, exactly the paper's contrast lifted to host level.
+The broker couples the replicas.  Synchronous mode: a loaded replica's
+plug request shrinks an idle one inline (``_reclaim_from_idlest`` -> the
+victim's ``reclaim_for_broker``), charging BOTH clocks with the reclaim
+stall (the victim does the work, the requester serializes behind it).
+Async mode: the request returns a ``Grant`` immediately and the sim's
+tick interleaving is what pipelines the reclaim — order issuance (at the
+requester's plug), partial fulfillment (the victim drains a chunk per
+tick, between its decodes), and grant completion (the requester claims
+escrowed fills at its own tick) all advance on the same deterministic
+virtual timebase, so the requester's decode overlaps the victim's drain.
+
+The sim hands the broker its virtual clock (total virtual busy time across
+replicas — monotonic, advanced only by ticks) so steal records and order
+timestamps are deterministic for a fixed (trace, seed), not wall-clock
+noise.
 """
 from __future__ import annotations
 
@@ -31,6 +41,16 @@ class ClusterSim:
         self.engines = dict(engines)
         self.router = router or Router()
         self.broker = broker          # kept for metrics; engines hold a ref
+        if broker is not None and hasattr(broker, "set_clock"):
+            broker.set_clock(self.virtual_now)
+        if self.router.broker is None:
+            self.router.broker = broker
+
+    def virtual_now(self) -> float:
+        """Deterministic host timebase: total virtual busy time.  Each
+        tick advances exactly one replica's clock, so deltas of this sum
+        measure the victim-side work between any two broker events."""
+        return sum(e.now for e in self.engines.values())
 
     # ------------------------------------------------------------------ run
     def run(self, requests: list, max_virtual_s: float = 1e9,
@@ -41,8 +61,11 @@ class ClusterSim:
 
         def busy(rid: str) -> bool:
             e = self.engines[rid]
+            host_work = getattr(e, "host_work", None)
             return bool(todos[rid] or e.pending or e.active
-                        or any(e.warm.values())) and e.now < max_virtual_s
+                        or any(e.warm.values())
+                        or (host_work is not None and host_work())) \
+                and e.now < max_virtual_s
 
         while ticks < max_ticks:
             busy_ids = [rid for rid in self.engines if busy(rid)]

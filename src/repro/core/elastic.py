@@ -184,13 +184,22 @@ class ElasticArena:
     def plug(self, units: int) -> float:
         """Grow the arena; returns wall seconds (incl. zero-fill).  With a
         host gate, ``units`` is a request — the host grants what it can
-        (stealing from an idler replica under pressure) and any grant the
-        manager can't absorb flows straight back."""
+        (stealing from an idler replica under pressure, or issuing async
+        reclaim orders whose fills arrive later via ``absorb``) and any
+        grant the manager can't absorb flows straight back."""
         if self.mode == "static":
             return 0.0
         if self._grant is not None:
             units = self._grant(units)
-        if units <= 0:
+        return self.absorb(units)
+
+    def absorb(self, units: int) -> float:
+        """Grant-completion path: absorb ``units`` the host has *already*
+        delivered (an async ``Grant`` fill the engine claimed), skipping
+        the host gate — requesting again would double-order.  Same device
+        work as ``plug``: grow rows, zero-fill, hand back any units the
+        manager can't take."""
+        if units <= 0 or self.mode == "static":
             return 0.0
         t0 = time.perf_counter()
         old = self.units()

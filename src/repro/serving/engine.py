@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cluster.host import AlwaysGrantBroker, MemoryBroker
+from repro.cluster.host import (AlwaysGrantBroker, Grant, MemoryBroker,
+                                ReclaimOrder)
 from repro.configs.base import ModelConfig
 from repro.core.arena import ArenaSpec, ReclaimEvent
 from repro.core.elastic import ElasticArena, bucket_ladder, target_bucket
@@ -90,11 +91,18 @@ class ServeEngine:
         # host control plane: growth is a *request* to the broker, never a
         # unilateral resize.  Standalone engines get an unmetered broker,
         # so single-replica behavior is byte-identical to pre-broker code.
+        # Async pipeline state: reclaim orders this VM owes the host
+        # (drained incrementally at tick boundaries) and open grants whose
+        # pending fills we claim as victims drain.
         self.replica_id = replica_id
+        self._reclaim_orders: deque[ReclaimOrder] = deque()
+        self._open_grants: list[Grant] = []
+        self.drain_parts_per_tick = 1
         self.broker = broker if broker is not None else AlwaysGrantBroker()
         self.broker.register(
             replica_id, start * spec.blocks_per_partition,
-            reclaim=self.reclaim_for_broker, load=self.load, mode=mode)
+            reclaim=self.reclaim_for_broker, load=self.load, mode=mode,
+            order_sink=None if mode == "static" else self._enqueue_order)
 
         self.now = 0.0
         self.pending: deque[Request] = deque()
@@ -127,17 +135,33 @@ class ServeEngine:
     # ------------------------------------------------------------ plumbing
     def _host_grant(self, native: int) -> int:
         """Arena host gate: convert this replica's native units (partitions
-        for hotmem, blocks for vanilla) to broker blocks, request them, and
-        floor the grant back to native granularity."""
+        for hotmem, blocks for vanilla) to broker blocks, request a grant,
+        and floor the immediate portion back to native granularity.  A sync
+        broker may steal inline — that victim-side reclaim wall is charged
+        to *our* clock too (we serialized behind it); an async broker
+        leaves the deficit pending on the grant instead, and the fills are
+        claimed at later ticks while our decode proceeds."""
         bpp = self.spec.blocks_per_partition
         want = native if self.mode == "vanilla" else native * bpp
-        got = self.broker.request_units(self.replica_id, want)
+        g = self.broker.request_grant(self.replica_id, want)
+        if g.stall_seconds:
+            self.now += g.stall_seconds
+            self.events.append(StepEvent(self.now, "stall", g.stall_seconds,
+                                         {"units": g.granted}))
+        if not g.done:
+            self._open_grants.append(g)
+        got = g.granted
         if self.mode == "vanilla":
             return got
         rem = got % bpp
         if rem:                           # sub-partition remainder: no use
             self.broker.release_units(self.replica_id, rem)
         return got // bpp
+
+    def _enqueue_order(self, order: ReclaimOrder) -> None:
+        """Order sink the broker calls under pressure: queue the shrink,
+        to be drained incrementally at our own tick boundaries."""
+        self._reclaim_orders.append(order)
 
     def _host_release(self, native: int) -> None:
         self.broker.release_units(
@@ -323,24 +347,25 @@ class ServeEngine:
         tgt = target_bucket(self.ladder, max(demand, self.ladder[0]))
         cur = self._units()
         if tgt > cur:
+            if self._reclaim_orders:
+                # the host ordered this VM to shrink; plugging now would
+                # ping-pong the same units back and forth between replicas
+                return
             # growth is a plug *request* through the arena's host gate: the
             # broker may grant less than asked (and may first steal from an
             # idler replica to cover it), so size the row sync to what the
-            # arena actually got
-            k = tgt - cur
+            # arena actually got.  Units already in flight on open grants
+            # (pending on victims' orders, or escrowed awaiting our claim)
+            # must not be re-requested.
+            # grants account in broker blocks; tgt/cur are partitions
+            owed = sum(g.pending + g.available for g in self._open_grants) \
+                // self.spec.blocks_per_partition
+            k = tgt - cur - owed
+            if k <= 0:
+                return
             units = k if self.mode != "vanilla" else \
                 k * self.spec.blocks_per_partition
-            before = self.arena.units()
-            wall = self.arena.plug(units)
-            added = self.arena.units() - before
-            if added:
-                t0 = time.perf_counter()
-                self._sync_rows(self._units())
-                jax.block_until_ready(jax.tree.leaves(self.caches)[0])
-                wall += time.perf_counter() - t0
-                self.now += wall
-                self.events.append(StepEvent(self.now, "plug", wall,
-                                             {"units": added}))
+            self._grow_and_sync(units, via_gate=True)
         elif tgt < cur:
             k = cur - tgt
             if self.mode == "hotmem" and \
@@ -349,6 +374,27 @@ class ServeEngine:
             units = k if self.mode != "vanilla" else \
                 k * self.spec.blocks_per_partition
             self._unplug_now(units)
+
+    def _grow_and_sync(self, native: int, *, via_gate: bool,
+                       detail: Optional[dict] = None) -> int:
+        """Grow the arena (through the host gate, or absorbing an
+        already-claimed grant fill) + row sync + virtual-clock charge +
+        event log — the one plug protocol both growth paths share (the
+        bit-identical-trace regression depends on it staying identical).
+        Returns native units actually added."""
+        before = self.arena.units()
+        wall = self.arena.plug(native) if via_gate \
+            else self.arena.absorb(native)
+        added = self.arena.units() - before
+        if added:
+            t0 = time.perf_counter()
+            self._sync_rows(self._units())
+            jax.block_until_ready(jax.tree.leaves(self.caches)[0])
+            wall += time.perf_counter() - t0
+            self.now += wall
+            self.events.append(StepEvent(self.now, "plug", wall,
+                                         {"units": added, **(detail or {})}))
+        return added
 
     def _unplug_now(self, units: int, *, stolen: bool = False
                     ) -> ReclaimEvent:
@@ -415,6 +461,65 @@ class ServeEngine:
                 break                      # active row blocks the suffix
             p -= 1
 
+    # -------------------------------------------------- async host pipeline
+    def host_work(self) -> bool:
+        """Open async-pipeline work: reclaim orders to drain (as victim) or
+        grant fills to claim (as requester).  ``ClusterSim`` keeps ticking
+        a replica while this is true so the pipeline always advances."""
+        return bool(self._reclaim_orders) or bool(self._open_grants)
+
+    def _service_reclaim_orders(self) -> None:
+        """Drain the pending-unplug queue incrementally: at most
+        ``drain_parts_per_tick`` partitions per tick, fencing high rows via
+        ``_evict_warm_suffix`` before each partial unplug — so the victim's
+        reclaim overlaps the requester's decode instead of stalling it
+        (the async pipeline's victim side)."""
+        q = self._reclaim_orders
+        while q and not q[0].open:
+            q.popleft()                  # filled naturally or canceled
+        if not q:
+            return
+        order = q[0]
+        chunk = min(self.drain_parts_per_tick
+                    * self.spec.blocks_per_partition, order.remaining)
+        freed, ev = self.reclaim_for_broker(chunk)
+        if freed:
+            accepted = self.broker.fulfill_order(order.order_id, freed, ev)
+            if freed > accepted:         # rounding excess: normal release
+                self.broker.release_units(self.replica_id, freed - accepted)
+            if not order.open:
+                q.popleft()
+        elif not self.active and not self.pending \
+                and not any(self.warm.values()):
+            # fully drained VM with nothing left to give: abandon the rest
+            # (a victim that finished naturally already filled the order
+            # through release routing — this cancel is the leftover)
+            self.broker.cancel_order(order.order_id)
+            q.popleft()
+
+    def _claim_grants(self, abandon: bool = False) -> None:
+        """Requester side of the async pipeline: absorb units that reclaim
+        orders drained into our open grants since the last tick (grant
+        completion at our own tick boundary, where row growth is legal).
+        With ``abandon`` (the engine is fully idle: its demand vanished),
+        pending remainders are canceled so victims stop draining for us
+        and a standalone ``run`` can terminate."""
+        if not self._open_grants:
+            return
+        bpp = self.spec.blocks_per_partition
+        for g in list(self._open_grants):
+            got = self.broker.claim_grant(g)
+            if got:
+                if self.mode != "vanilla" and got % bpp:
+                    self.broker.release_units(self.replica_id, got % bpp)
+                native = got if self.mode == "vanilla" else got // bpp
+                self._grow_and_sync(native, via_gate=False,
+                                    detail={"async_fill": True})
+            if abandon and not g.done:
+                self.broker.abandon_grant(g)
+            if g.done and g.available == 0:
+                self._open_grants.remove(g)
+
     def reclaim_for_broker(self, k_blocks: int
                            ) -> tuple[int, Optional[ReclaimEvent]]:
         """Victim side of a host steal: the broker (hypervisor) needs
@@ -442,6 +547,9 @@ class ServeEngine:
                 self.arena.finish(rid)
                 self.warm[prof].remove((t, rid, row))
             units = k_parts * bpp
+            if self.arena.manager.shrink_plan(units)[0] == 0:
+                return 0, None        # nothing reclaimable: skip the
+                #                       zero-yield migration pass entirely
         ev = self._unplug_now(units, stolen=True)
         return (ev.reclaimed_units *
                 (1 if self.mode == "vanilla" else bpp)), ev
@@ -454,6 +562,14 @@ class ServeEngine:
         across replicas in virtual-time order."""
         while todo and todo[0].submit_s <= self.now:
             self.submit(todo.popleft())
+        # async host pipeline first: claim grant fills (rows grow before
+        # admission) and drain one chunk of any open reclaim order — both
+        # at this tick boundary, never inside another replica's request.
+        # A fully idle engine abandons pending grants: its demand is gone.
+        self._claim_grants(abandon=not todo and not self.active
+                           and not self.pending
+                           and not any(self.warm.values()))
+        self._service_reclaim_orders()
         if not self.active and not self.pending and todo:
             self.now = max(self.now, todo[0].submit_s)
             return
@@ -474,7 +590,8 @@ class ServeEngine:
     def run(self, requests: list[Request], max_virtual_s: float = 1e9):
         todo = deque(sorted(requests, key=lambda r: r.submit_s))
         while (todo or self.pending or self.active
-               or any(self.warm.values())) and self.now < max_virtual_s:
+               or any(self.warm.values()) or self.host_work()) \
+                and self.now < max_virtual_s:
             self._tick(todo)
         return self.metrics()
 

@@ -1,6 +1,7 @@
 """Property-based tests on the managers' invariants — the paper's
 correctness core: partitions never double-booked, refcounts sound, HotMem
-reclaim never migrates, vanilla reclaim preserves every live block.
+reclaim never migrates, vanilla reclaim preserves every live block — plus
+the async broker's conservation law under arbitrary order interleavings.
 
 Two drivers over the same op-stream interpreters:
   * hypothesis (when installed) explores adversarial op sequences;
@@ -8,10 +9,13 @@ Two drivers over the same op-stream interpreters:
     pseudo-random sequences, so the invariants are exercised on every run
     even where hypothesis is absent (this container).
 """
+import itertools
 import random
+from collections import deque
 
 import pytest
 
+from repro.cluster import HostMemoryBroker
 from repro.core.arena import ArenaSpec
 from repro.core.hotmem import HotMemManager
 from repro.core.vanilla import VanillaPagedManager
@@ -20,6 +24,8 @@ SPEC = ArenaSpec(partition_tokens=64, n_partitions=8, block_tokens=16,
                  bytes_per_partition=1024)
 
 OP_KINDS = ("reserve", "grow", "release", "fork", "plug", "unplug")
+
+BROKER_OP_KINDS = ("request", "drain", "release", "claim", "cancel")
 
 
 # ---------------------------------------------------------------- drivers
@@ -96,6 +102,67 @@ def _seeded_ops(seed, n_ops):
     return ops
 
 
+def run_async_broker_ops(ops, n_replicas, budget=32):
+    """Interpret an op stream against an async ``HostMemoryBroker`` across
+    2–4 replicas: arbitrary interleavings of plug requests (grant + order
+    issuance), partial order fulfillments, natural releases, grant claims,
+    and cancels.  After EVERY op: the conservation invariant
+    ``free + granted + escrow == budget`` holds and no grant ever carries
+    more units than were requested."""
+    clock = itertools.count(1)
+    broker = HostMemoryBroker(budget, async_reclaim=True,
+                              clock=lambda: float(next(clock)))
+    rids = [f"v{i}" for i in range(n_replicas)]
+    order_q = {r: deque() for r in rids}
+    grants = {r: [] for r in rids}
+    per_replica = budget // (n_replicas + 1)     # leave some pool free
+    for i, r in enumerate(rids):
+        broker.register(r, per_replica, load=lambda i=i: i,
+                        order_sink=order_q[r].append, mode="hotmem")
+    broker.check_invariants()
+
+    def front_open(r):
+        q = order_q[r]
+        while q and not q[0].open:
+            q.popleft()
+        return q[0] if q else None
+
+    for kind, a, b in ops:
+        r = rids[a % n_replicas]
+        if kind == "request":
+            g = broker.request_grant(r, 1 + b % 8)
+            if not g.done or g.available:
+                grants[r].append(g)
+        elif kind == "drain":
+            o = front_open(r)
+            if o is not None:
+                broker.fulfill_order(o.order_id, 1 + b % 4)
+        elif kind == "release":
+            have = broker.granted[r]
+            if have:
+                broker.release_units(r, 1 + b % have)
+        elif kind == "claim":
+            for g in grants[r]:
+                broker.claim_grant(g)
+        elif kind == "cancel":
+            o = front_open(r)
+            if o is not None:
+                broker.cancel_order(o.order_id)
+        broker.check_invariants()                # conservation, every event
+        for glist in grants.values():
+            for g in glist:
+                assert g.fulfilled <= g.requested, \
+                    "granted more than requested"
+                assert g.pending >= 0 and g.available >= 0
+    return broker
+
+
+def _seeded_broker_ops(seed, n_ops):
+    rng = random.Random(seed)
+    return [(rng.choice(BROKER_OP_KINDS), rng.randint(0, 15),
+             rng.randint(0, 15)) for _ in range(n_ops)]
+
+
 # ------------------------------------------------- hypothesis (if present)
 
 try:
@@ -137,6 +204,17 @@ if HAVE_HYPOTHESIS:
     @given(st.integers(2, 8))
     def test_waitqueue_fifo_wakeup(n):
         _check_waitqueue_fifo(n)
+
+    BROKER_OPS = st.lists(
+        st.tuples(st.sampled_from(BROKER_OP_KINDS),
+                  st.integers(0, 15), st.integers(0, 15)),
+        min_size=1, max_size=80,
+    )
+
+    @settings(max_examples=200, deadline=None)
+    @given(BROKER_OPS, st.integers(2, 4))
+    def test_async_broker_conservation(ops, n_replicas):
+        run_async_broker_ops(ops, n_replicas)
 else:
     def test_hypothesis_missing_is_reported():
         """Collection must stay green without hypothesis; the seeded
@@ -155,6 +233,12 @@ def test_hotmem_invariants_seeded(seed):
 @pytest.mark.parametrize("seed", range(25))
 def test_vanilla_invariants_seeded(seed):
     run_vanilla_ops(_seeded_ops(1000 + seed, 60))
+
+
+@pytest.mark.parametrize("seed", range(25))
+@pytest.mark.parametrize("n_replicas", [2, 3, 4])
+def test_async_broker_conservation_seeded(seed, n_replicas):
+    run_async_broker_ops(_seeded_broker_ops(2000 + seed, 80), n_replicas)
 
 
 def _check_unplug_only_free_suffix(n_live, k):

@@ -1,0 +1,393 @@
+"""Deterministic-concurrency tests for the async host reclaim pipeline.
+
+The broker's asynchrony is cooperative (orders drain at tick boundaries),
+so every interleaving here is *scripted* — grant issuance, partial
+fulfillment, natural release, claim, and cancel are stepped explicitly (or
+driven through ``ClusterSim`` with deterministic stub replicas) and the
+conservation invariant ``free + granted + escrow == budget`` is checked
+after every event.  The three properties the tier pins down:
+
+  (a) conservation holds at every step of a scripted
+      grant/steal/release/cancel schedule;
+  (b) a requester's decode proceeds while a victim's reclaim order is
+      still draining (overlap, proven on the fake virtual clock);
+  (c) a victim finishing naturally fills/cancels the remainder of its
+      open order without double-releasing units.
+"""
+import itertools
+from collections import deque
+
+import pytest
+
+from repro.cluster import ClusterSim, HostMemoryBroker, Router
+from repro.serving.request import PROFILES, Request, State
+
+
+def _fake_clock():
+    """Monotonic deterministic clock: 1.0 per reading."""
+    c = itertools.count(1)
+    return lambda: float(next(c))
+
+
+def _mk(budget, replicas, *, loads=None, clock=None):
+    """Async broker + per-replica order queues (the engines' order sinks)."""
+    broker = HostMemoryBroker(budget, async_reclaim=True,
+                              clock=clock or _fake_clock())
+    sinks = {}
+    loads = loads or {}
+    for rid, units in replicas:
+        sinks[rid] = deque()
+        broker.register(rid, units, load=lambda r=rid: loads.get(r, 0),
+                        order_sink=sinks[rid].append, mode="hotmem")
+    return broker, sinks
+
+
+# ----------------------------------------------------- (a) conservation
+
+
+def test_conservation_scripted_schedule():
+    """free + granted + escrow == budget after EVERY event of a scripted
+    grant/partial-fill/release/claim/cancel interleaving."""
+    loads = {"a": 5, "b": 0, "c": 1}
+    broker, sinks = _mk(24, [("a", 8), ("b", 8), ("c", 8)], loads=loads)
+    broker.check_invariants()
+
+    g = broker.request_grant("a", 10)          # free pool is empty
+    broker.check_invariants()
+    assert g.granted == 0 and g.pending == 10 and not g.done
+    # orders go to the idlest victims first, capped by their holdings
+    ob, oc = sinks["b"][0], sinks["c"][0]
+    assert (ob.victim, ob.units) == ("b", 8)
+    assert (oc.victim, oc.units) == ("c", 2)
+    assert broker.pending_units() == 10
+    assert broker.pressure() == 10 / 24
+
+    # victim b drains a partial chunk
+    assert broker.fulfill_order(ob.order_id, 3) == 3
+    broker.check_invariants()
+    assert g.available == 3 and g.pending == 7
+    assert broker.granted["b"] == 5 and broker.escrow_units() == 3
+
+    # requester claims mid-drain (grant completion is incremental too)
+    assert broker.claim_grant(g) == 3
+    broker.check_invariants()
+    assert broker.granted["a"] == 11 and g.claimed == 3
+
+    # a release from a replica WITHOUT open orders goes to the pool
+    broker.release_units("a", 1)
+    broker.check_invariants()
+    assert broker.free_units == 1
+
+    # the victim releasing naturally routes INTO its open order (c)
+    broker.release_units("b", 2)
+    broker.check_invariants()
+    assert ob.filled == 5 and broker.free_units == 1
+    assert g.available == 2
+
+    # over-fulfillment is clipped to the remainder
+    assert broker.fulfill_order(ob.order_id, 99) == 3
+    broker.check_invariants()
+    assert not ob.open and broker.granted["b"] == 0
+
+    # victim c cannot supply: cancels its remainder
+    assert broker.cancel_order(oc.order_id) == 2
+    broker.check_invariants()
+    assert g.done and g.pending == 0
+
+    assert broker.claim_grant(g) == 5
+    broker.check_invariants()
+    assert g not in broker.grants
+    assert g.fulfilled <= g.requested
+    assert broker.granted == {"a": 15, "b": 0, "c": 8}
+    assert broker.free_units == 1
+
+
+def test_request_grant_fills_from_pool_first():
+    broker, sinks = _mk(16, [("a", 4), ("b", 6)])
+    g = broker.request_grant("a", 9)           # free = 6
+    broker.check_invariants()
+    assert g.granted == 6 and g.pending == 3
+    assert sinks["b"][0].units == 3
+    # legacy blocking call returns only the immediate portion AND cancels
+    # the orders it issued — a legacy caller can never claim their fills,
+    # which would strand the proceeds in escrow forever
+    assert broker.request_units("a", 2) == 0
+    broker.check_invariants()
+    assert broker.pending_units() == 3         # only g's order survives
+    # b draining everything it owes leaves nothing stranded
+    broker.release_units("b", 6)
+    broker.check_invariants()
+    assert broker.claim_grant(g) == 3
+    assert broker.free_units == 3 and broker.escrow_units() == 0
+
+
+def test_abandoned_grant_stops_the_drain():
+    """A requester whose demand vanished abandons its grant: the victim's
+    order closes, escrowed units remain claimable, nothing leaks."""
+    broker, sinks = _mk(8, [("a", 2), ("b", 6)])
+    g = broker.request_grant("a", 6)
+    broker.fulfill_order(sinks["b"][0].order_id, 2)
+    broker.check_invariants()
+    assert broker.abandon_grant(g) == 4
+    broker.check_invariants()
+    assert not sinks["b"][0].open and g.pending == 0
+    assert broker.claim_grant(g) == 2          # escrow still delivered
+    broker.check_invariants()
+    assert g not in broker.grants
+    assert broker.granted == {"a": 4, "b": 4}
+
+
+def test_orders_capped_by_outstanding():
+    """A victim is never ordered to return more than it holds, counting
+    units already promised to earlier orders."""
+    broker, sinks = _mk(12, [("a", 2), ("b", 10)])
+    g1 = broker.request_grant("a", 6)
+    g2 = broker.request_grant("a", 8)
+    broker.check_invariants()
+    assert g1.pending == 6
+    # b holds 10, 6 already ordered -> only 4 more can be promised
+    assert g2.pending == 4
+    assert broker.denied_units == 4
+    assert broker.open_order_units("b") == 10
+
+
+# ------------------------------------------- (b) overlap on the fake clock
+
+
+class _StubReplica:
+    """Deterministic metadata-only replica, ``ClusterSim``-compatible:
+    decode costs exactly 1.0 virtual seconds, an order-drain chunk 0.25,
+    so the interleaving (and hence the whole schedule) is a pure function
+    of the script — no wall-clock measurement anywhere."""
+
+    DECODE_S = 1.0
+    DRAIN_S = 0.25
+
+    def __init__(self, rid, broker, units, decode_steps=10):
+        self.rid = rid
+        self.broker = broker
+        self.units = units
+        self.decode_steps = decode_steps
+        self.now = 0.0
+        self.pending: deque = deque()
+        self.active: dict[str, int] = {}
+        self.warm: dict[str, list] = {}
+        self.done: list = []
+        self.events: list[tuple[float, str, int]] = []
+        self._orders: deque = deque()
+        self._grants: list = []
+        broker.register(rid, units, load=self.load,
+                        order_sink=self._orders.append, mode="stub")
+
+    def load(self) -> int:
+        return len(self.active) + len(self.pending)
+
+    def host_work(self) -> bool:
+        return bool(self._orders) or bool(self._grants)
+
+    def request(self, want) -> object:
+        g = self.broker.request_grant(self.rid, want)
+        self.units += g.granted
+        if not g.done or g.available:
+            self._grants.append(g)
+        return g
+
+    def _tick(self, todo: deque) -> None:
+        while todo and todo[0].submit_s <= self.now:
+            req = todo.popleft()
+            self.active[req.rid] = self.decode_steps
+            req.state = State.RUNNING
+            self.pending.append(req)
+        # requester side: claim fills at our own tick boundary
+        for g in list(self._grants):
+            got = self.broker.claim_grant(g)
+            if got:
+                self.units += got
+                self.events.append((self.now, "fill", got))
+            if g.done and g.available == 0:
+                self._grants.remove(g)
+        # victim side: drain one chunk of the front order per tick
+        while self._orders and not self._orders[0].open:
+            self._orders.popleft()
+        if self._orders:
+            o = self._orders[0]
+            if self.units > 0:
+                self.now += self.DRAIN_S
+                acc = self.broker.fulfill_order(o.order_id, 1)
+                self.units -= acc
+                self.events.append((self.now, "drain", acc))
+            else:
+                self.broker.cancel_order(o.order_id)
+                self._orders.popleft()
+        elif self.active:
+            self.now += self.DECODE_S
+            # record how many host-wide units were still owed while THIS
+            # decode step ran: >0 means decode overlapped an open order
+            self.events.append((self.now, "decode",
+                                self.broker.pending_units()))
+            for rid in list(self.active):
+                self.active[rid] -= 1
+                if self.active[rid] <= 0:
+                    del self.active[rid]
+                    req = self.pending.popleft()
+                    req.state = State.DONE
+                    req.done_s = self.now
+                    self.done.append(req)
+        else:
+            self.now += 0.1
+        self.broker.check_invariants()
+
+    def metrics(self):
+        return {"reclaimed_bytes": 0, "migrated_bytes": 0,
+                "reclaim_events": sum(1 for e in self.events
+                                      if e[1] == "drain")}
+
+
+def test_decode_overlaps_order_drain_on_fake_clock():
+    """THE async property: the requester keeps decoding while the victim's
+    reclaim order is still draining — scripted through the real
+    ``ClusterSim`` interleaver on the deterministic virtual clock."""
+    broker = HostMemoryBroker(16, async_reclaim=True, clock=_fake_clock())
+    a = _StubReplica("a", broker, units=4, decode_steps=10)
+    b = _StubReplica("b", broker, units=12)
+    g = a.request(8)                           # free pool empty -> all async
+    assert g.granted == 0 and g.pending == 8   # requester NOT blocked
+    broker.check_invariants()
+
+    req = Request(rid="r0", profile=PROFILES["cnn"], submit_s=0.0)
+    sim = ClusterSim({"a": a, "b": b},
+                     Router(route_fn=lambda r, e: "a"), broker)
+    m = sim.run([req], max_virtual_s=100)
+    broker.check_invariants()
+
+    assert m["completed"] == 1
+    assert g.done and g.claimed == 8           # grant completed via fills
+    assert a.units == 4 + 8 and b.units == 4
+    decodes = [e for e in a.events if e[1] == "decode"]
+    drains = [e for e in b.events if e[1] == "drain"]
+    assert len(decodes) == 10 and len(drains) == 8
+    # overlap proven: at least one decode ran while units were still owed
+    overlapped = [e for e in decodes if e[2] > 0]
+    assert overlapped, "no decode step overlapped the open reclaim order"
+    # and the drain really was incremental: fills arrived across ticks
+    fills = [e for e in a.events if e[1] == "fill"]
+    assert len(fills) >= 2
+    # deterministic replay: the schedule is a pure function of the script
+    assert decodes[0][0] == pytest.approx(1.0)
+    assert drains[0][0] == pytest.approx(0.25)
+
+
+def test_sync_broker_has_no_overlap_async_does():
+    """Contrast fixture for the benchmark's stall column: the sync broker
+    reports a positive requester-visible stall; the async broker's is 0."""
+    calls = []
+
+    def reclaim(k):
+        calls.append(k)
+        return min(k, 4), None                 # b only holds 4
+
+    sync = HostMemoryBroker(8, clock=_fake_clock())
+    sync.register("a", 4)
+    sync.register("b", 4, reclaim=reclaim, load=lambda: 0)
+    g = sync.request_grant("a", 8)
+    assert calls and g.stall_seconds > 0       # serialized behind victim
+    assert sync.request_stalls and max(sync.request_stalls) > 0
+
+    broker, _ = _mk(8, [("a", 4), ("b", 4)])
+    g = broker.request_grant("a", 8)
+    assert g.stall_seconds == 0.0
+    assert broker.request_stalls == [0.0]
+
+
+# ------------------------------------- (c) natural finish / cancel safety
+
+
+def test_natural_finish_fills_order_without_double_release():
+    """A victim finishing naturally releases its units once: they route
+    into the open order (feeding the requester), never ALSO to the pool."""
+    broker, sinks = _mk(8, [("a", 2), ("b", 6)])
+    g = broker.request_grant("a", 6)
+    o = sinks["b"][0]
+    assert o.units == 6
+    # b's workload ends: it releases 4 units the normal way
+    broker.release_units("b", 4)
+    broker.check_invariants()
+    assert o.filled == 4 and g.available == 4
+    assert broker.free_units == 0              # NOT double-credited
+    assert broker.granted["b"] == 2
+    # b has nothing left to give: cancel the remainder
+    assert broker.cancel_order(o.order_id) == 2
+    broker.check_invariants()
+    assert not o.open and g.pending == 0
+    assert broker.claim_grant(g) == 4
+    broker.check_invariants()
+    assert broker.granted == {"a": 6, "b": 2}
+    # the released units are gone from b — releasing again must fail
+    with pytest.raises(AssertionError):
+        broker.release_units("b", 3)
+
+
+def test_cancel_closes_grant_and_counts_denied():
+    broker, sinks = _mk(6, [("a", 2), ("b", 4)])
+    g = broker.request_grant("a", 4)
+    o = sinks["b"][0]
+    assert broker.cancel_order(o.order_id) == 4
+    broker.check_invariants()
+    assert g.done and g not in broker.grants
+    assert broker.denied_units == 4
+    assert not o.open and o.closed_at is not None
+
+
+def test_release_beyond_orders_reaches_pool():
+    broker, sinks = _mk(8, [("a", 2), ("b", 6)])
+    broker.request_grant("a", 2)               # order b for 2
+    broker.release_units("b", 5)               # 2 fill the order, 3 -> pool
+    broker.check_invariants()
+    assert broker.free_units == 3
+    assert broker.granted["b"] == 1
+    assert not sinks["b"][0].open
+
+
+# -------------------------------------------------- pressure-aware routing
+
+
+class _FakeEngine:
+    def __init__(self, load):
+        self._load = load
+        self.warm = {}
+
+    def load(self):
+        return self._load
+
+
+def test_power_of_two_avoids_draining_victim():
+    """p2c prefers the sampled replica WITHOUT open reclaim orders, even
+    when the draining one is less loaded."""
+    broker, sinks = _mk(8, [("a", 2), ("b", 6)], loads={"a": 9, "b": 0})
+    broker.request_grant("a", 3)               # b now owes 3 (draining)
+    assert broker.open_order_units("b") == 3
+    engines = {"a": _FakeEngine(9), "b": _FakeEngine(0)}
+    r = Router("power_of_two", broker=broker)
+    req = Request(rid="x", profile=PROFILES["cnn"], submit_s=0.0)
+    assert r.route(req, engines) == "a"        # dodges the victim
+    assert r.drain_avoided == 1
+    # once the order is drained, load wins again
+    broker.fulfill_order(sinks["b"][0].order_id, 3)
+    broker.check_invariants()
+    assert r.route(req, engines) == "b"
+
+
+def test_power_of_two_deterministic_sampling():
+    engines = {f"r{i}": _FakeEngine(i) for i in range(4)}
+    req = Request(rid="x", profile=PROFILES["cnn"], submit_s=0.0)
+    picks1 = [Router("power_of_two", seed=7).route(req, dict(engines))
+              for _ in range(10)]
+    r2 = Router("power_of_two", seed=7)
+    picks2 = [r2.route(req, dict(engines)) for _ in range(10)]
+    # same seed, same trace -> byte-identical routing... but each Router
+    # advances its own rng, so compare a fresh router per call vs a
+    # replayed sequence from an identically-seeded router
+    r3 = Router("power_of_two", seed=7)
+    picks3 = [r3.route(req, dict(engines)) for _ in range(10)]
+    assert picks2 == picks3
+    assert all(p == picks1[0] for p in picks1)

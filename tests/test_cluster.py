@@ -361,3 +361,101 @@ def test_single_replica_regression(setup, monkeypatch):
         assert m[key] == base[key], key
     assert not solo.steal_log                          # nothing to steal
     solo.check_invariants()
+
+
+@pytest.mark.slow
+def test_single_replica_stepevent_trace_bit_identical(setup, monkeypatch):
+    """The async-broker refactor must leave standalone engines untouched:
+    the full ``StepEvent`` trace — every (t, kind, wall, detail) tuple —
+    is bit-identical on ``AlwaysGrantBroker``, an uncontended sync
+    ``HostMemoryBroker``, and an uncontended async one (same guarantee
+    PR 1 established, extended to the async protocol)."""
+    import repro.core.elastic as elastic_mod
+    import repro.core.hotmem as hotmem_mod
+    import repro.core.vanilla as vanilla_mod
+    import repro.serving.engine as engine_mod
+    from repro.serving.engine import ServeEngine
+    from repro.serving.request import PROFILES, Request
+    from repro.serving.tracegen import assign_profiles, bursty_trace
+    cfg, params, spec = setup
+
+    def run(broker):
+        clock = _FakeClock()
+        for mod in (engine_mod, elastic_mod, hotmem_mod, vanilla_mod):
+            monkeypatch.setattr(mod, "time", clock)
+        arr = bursty_trace(8.0, 0.8, burst_x=5.0, burst_at=(0.0,),
+                           burst_len=2.0, quiet_after=4.0, seed=11)
+        reqs = [Request(rid=f"s{i}", profile=p, submit_s=t)
+                for i, (t, p) in enumerate(
+                    assign_profiles(arr, PROFILES, 11))]
+        eng = ServeEngine(cfg, params, spec, mode="hotmem", keep_alive=2.0,
+                          seed=0, broker=broker)
+        eng.run(reqs, max_virtual_s=2000)
+        return [(e.t, e.kind, e.wall_s, e.detail) for e in eng.events]
+
+    budget = spec.n_partitions * spec.blocks_per_partition
+    base = run(None)                                   # AlwaysGrantBroker
+    sync_trace = run(HostMemoryBroker(budget_units=budget))
+    async_trace = run(HostMemoryBroker(budget_units=budget,
+                                       async_reclaim=True))
+    assert sync_trace == base
+    assert async_trace == base
+    assert not any(kind == "stall" for _, kind, _, _ in base)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["hotmem", "vanilla"])
+def test_async_cluster_end_to_end(setup, mode):
+    """Two real replicas on an async broker: the trace completes, the
+    requester never blocks on a victim reclaim (all request stalls are 0),
+    the victim drains orders between its ticks, and the requester decodes
+    while orders are still open (engine-level overlap)."""
+    from repro.serving.engine import ServeEngine
+    cfg, params, spec = setup
+    bpp = spec.blocks_per_partition
+    broker = HostMemoryBroker(budget_units=10 * bpp, async_reclaim=True)
+    engines = {rid: ServeEngine(cfg, params, spec, mode=mode,
+                                keep_alive=3.0, seed=i, broker=broker,
+                                replica_id=rid)
+               for i, rid in enumerate(("A", "B"))}
+
+    # spy: count A's decode steps at order issuance vs at each fill — a
+    # fill at a strictly larger count proves A decoded mid-drain
+    def a_decodes():
+        return sum(1 for e in engines["A"].events if e.kind == "decode")
+
+    issue_counts, fill_counts = [], []
+    orig_issue = broker._issue_orders
+    orig_fill = broker._apply_fill
+
+    def spy_issue(requester, deficit, grant):
+        issue_counts.append(a_decodes())
+        return orig_issue(requester, deficit, grant)
+
+    def spy_fill(o, k, **kw):
+        fill_counts.append(a_decodes())
+        return orig_fill(o, k, **kw)
+
+    broker._issue_orders = spy_issue
+    broker._apply_fill = spy_fill
+    reqs = _cluster_reqs()
+    sim = ClusterSim(engines, Router(route_fn=lambda r, e:
+                                     "B" if r.rid.startswith("b") else "A"),
+                     broker)
+    m = sim.run(reqs, max_virtual_s=2000)
+    broker.check_invariants()
+    for e in engines.values():
+        e.arena.manager.check_invariants()
+    assert m["completed"] == len(reqs)
+    assert m["killed"] == 0
+    rep = m["broker"]
+    assert rep["steals"] > 0                           # pressure engaged B
+    assert rep["pending_units"] == 0                   # pipeline drained
+    assert all(s == 0.0 for s in broker.request_stalls)
+    assert issue_counts and fill_counts
+    assert max(fill_counts) > min(issue_counts), \
+        "no decode progressed between order issuance and a fill"
+    if mode == "hotmem":
+        assert rep["by_mode"][mode]["migrated_bytes"] == 0
+    else:
+        assert rep["by_mode"][mode]["migrated_bytes"] > 0
