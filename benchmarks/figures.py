@@ -311,6 +311,101 @@ def cluster_reclaim() -> list[Row]:
                 f"lat_p99_us={(m['latency_p99'] or 0) * 1e6:.0f} "
                 f"completed={m['completed']}/{len(reqs)}"))
         rows += _steal_pipeline_rows(mode)
+    rows += _snapshot_restart_rows()
+    return rows
+
+
+def _snapshot_restart_rows() -> list[Row]:
+    """Host snapshot pool (TrEnv-X-style warm restarts on the Squeezy
+    broker), two contrasts:
+
+    TTFT rows: one hotmem engine runs the same function cold (prefill),
+    warm (kept-alive adopt), and restored (its warm container expired but
+    the partition was copied out to the host pool first) — the value
+    column is admitted->first-token in us.  Restore lands strictly
+    between the warm adopt and the cold prefill: it pays one host->device
+    row copy but no model compute.
+
+    Squeeze rows: the same spare capacity held either AS snapshots (the
+    host's segregated bounded-lifetime region) or INSIDE an idle victim
+    VM (kept-alive containers).  The same pressured plug request is then
+    covered by an LRU snapshot drop — metadata-only, zero migration, no
+    ``ReclaimOrder`` — versus a reclaim order the victim must drain."""
+    rows: list[Row] = []
+    cfg, spec = _cfg_spec(partition_tokens=128, n_partitions=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    bpp = spec.blocks_per_partition
+    broker = HostMemoryBroker(budget_units=12 * bpp,
+                              snapshot_pool_units=4 * bpp)
+    eng = ServeEngine(cfg, params, spec, mode="hotmem", keep_alive=2.0,
+                      seed=0, broker=broker, replica_id="A")
+    empty = deque()
+
+    def run_one(rid):
+        eng.submit(Request(rid=rid, profile=PROFILES["cnn"],
+                           submit_s=eng.now))
+        while eng.active or eng.pending:
+            eng._tick(empty)
+        req = next(r for r in eng.done if r.rid == rid)
+        return (req.first_token_s - req.admitted_s) * 1e6
+
+    run_one("jit0")                  # compile prefill+decode out of band
+    for prof, entries in list(eng.warm.items()):
+        for (_, rid, _row) in entries:   # drop the jit-warm container
+            eng.arena.finish(rid)        # (without snapshotting it)
+        eng.warm[prof] = []
+    cold_us = run_one("c0")
+    warm_us = run_one("w0")              # adopts c0's kept-alive row
+    eng.now += eng.keep_alive + 1.0
+    eng._recycle_idle()                  # expiry -> capture to the pool
+    restore_us = run_one("s0")           # restores from the pool
+    snap_ev = [e for e in eng.events if e.kind == "snapshot"][-1]
+    rest_ev = [e for e in eng.events if e.kind == "restore"][-1]
+    between = warm_us < restore_us < cold_us
+    rows.append(("cluster_reclaim/snapshot_ttft/cold", cold_us,
+                 "path=prefill"))
+    rows.append(("cluster_reclaim/snapshot_ttft/warm", warm_us,
+                 "path=adopt copy_B=0"))
+    rows.append(("cluster_reclaim/snapshot_ttft/restore", restore_us,
+                 f"path=restore copy_B={rest_ev.detail['bytes']} "
+                 f"restore_us={rest_ev.wall_s * 1e6:.0f} "
+                 f"capture_us={snap_ev.wall_s * 1e6:.0f} "
+                 f"between_warm_and_cold={'yes' if between else 'NO'}"))
+
+    def pressured_grant(spare_as_snapshots: bool):
+        b = HostMemoryBroker(budget_units=12, async_reclaim=True,
+                             snapshot_pool_units=4
+                             if spare_as_snapshots else None)
+        orders = deque()
+        if spare_as_snapshots:
+            b.register("A", 4, load=lambda: 9, order_sink=orders.append,
+                       mode="hotmem")
+            b.register("B", 4, load=lambda: 0, order_sink=orders.append,
+                       mode="hotmem")
+            assert b.snapshot_put("cnn", units=2, nbytes=1 << 20)
+            assert b.snapshot_put("bert", units=2, nbytes=1 << 20)
+        else:
+            b.register("A", 4, load=lambda: 9, order_sink=orders.append,
+                       mode="hotmem")
+            b.register("B", 8, load=lambda: 0, order_sink=orders.append,
+                       mode="hotmem")      # spare lives inside the victim
+        t0 = time.perf_counter()
+        g = b.request_grant("A", 4)
+        us = (time.perf_counter() - t0) * 1e6
+        b.check_invariants()
+        rep = b.report()
+        return us, g, len(orders), rep
+
+    us_p, g_p, orders_p, rep_p = pressured_grant(True)
+    us_v, g_v, orders_v, rep_v = pressured_grant(False)
+    rows.append(("cluster_reclaim/snapshot_squeeze/pool", us_p,
+                 f"granted_now={g_p.granted} pending={g_p.pending} "
+                 f"orders={orders_p} squeezed_units={rep_p['squeezed_units']} "
+                 f"migrated_B=0"))
+    rows.append(("cluster_reclaim/snapshot_squeeze/victim", us_v,
+                 f"granted_now={g_v.granted} pending={g_v.pending} "
+                 f"orders={orders_v} squeezed_units={rep_v['squeezed_units']} "
+                 f"victim_owes={rep_v['pending_units']}"))
     return rows
 
 

@@ -11,8 +11,19 @@ and with the async reclaim pipeline (B receives a ``ReclaimOrder`` and
 drains it between its own ticks while A keeps decoding; A's stall is 0
 and the grant completes incrementally).
 
+``--policy`` selects the router: the default ``pinned`` route reproduces
+the classic steal scenario; any ``repro.cluster.router`` policy name
+spreads the shared trace instead.  ``snapshot_affinity`` also enables the
+host snapshot pool: expiring warm containers are copied out and later
+invocations restore from the pool instead of prefilling (the ``warm``/
+``restore`` columns count engine-side start paths; ``squeezed`` counts
+snapshot units the broker dropped — metadata-only — to cover grants).
+
   PYTHONPATH=src python examples/cluster_demo.py
+  PYTHONPATH=src python examples/cluster_demo.py \
+      --policy snapshot_affinity --modes hotmem
 """
+import argparse
 import os
 import sys
 
@@ -25,6 +36,7 @@ jax.config.update("jax_platform_name", "cpu")
 import numpy as np
 
 from repro.cluster import ClusterSim, HostMemoryBroker, Router
+from repro.cluster.router import POLICIES
 from repro.configs.base import get_config, reduced
 from repro.core.arena import ArenaSpec
 from repro.models import model as M
@@ -34,21 +46,36 @@ from repro.serving.tracegen import assign_profiles, bursty_trace
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="pinned",
+                    choices=("pinned",) + POLICIES,
+                    help="router policy (pinned = quiet load on B, "
+                         "burst on A — the classic steal scenario)")
+    ap.add_argument("--modes", default="hotmem,vanilla",
+                    help="comma-separated engine modes to run")
+    args = ap.parse_args()
+
     cfg = reduced(get_config("qwen2-7b"))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     spec = ArenaSpec.from_model(cfg, partition_tokens=128, n_partitions=8,
                                 block_tokens=32)
     bpp = spec.blocks_per_partition
+    # snapshot_affinity is the policy that exploits the host snapshot
+    # pool, so only it pays for one (4 partitions' worth, LRU-bounded)
+    pool_units = 4 * bpp if args.policy == "snapshot_affinity" else None
 
+    print(f"policy={args.policy}")
     print(f"{'mode':10s} {'broker':6s} {'completed':>9s} {'steals':>6s} "
           f"{'stall_p99_ms':>12s} {'steal_ms':>9s} {'migratedKiB':>11s} "
-          f"{'lat_p99_s':>9s}")
-    for mode in ("hotmem", "vanilla"):
+          f"{'lat_p99_s':>9s} {'warm':>5s} {'restore':>7s} {'squeezed':>8s}")
+    for mode in args.modes.split(","):
         for async_mode in (False, True):
             # host budget: 10 partitions' worth — less than 2 full arenas,
-            # so A's burst cannot grow without shrinking B
+            # so A's burst cannot grow without shrinking B (or squeezing
+            # the snapshot pool first, when one exists)
             broker = HostMemoryBroker(budget_units=10 * bpp,
-                                      async_reclaim=async_mode)
+                                      async_reclaim=async_mode,
+                                      snapshot_pool_units=pool_units)
             engines = {rid: ServeEngine(cfg, params, spec, mode=mode,
                                         keep_alive=3.0, seed=i,
                                         broker=broker, replica_id=rid)
@@ -64,8 +91,19 @@ def main() -> None:
             reqs += [Request(rid=f"a{i}", profile=p, submit_s=t)
                      for i, (t, p) in enumerate(
                          assign_profiles(burst, PROFILES, 3))]
-            router = Router(route_fn=lambda r, e:
-                            "B" if r.rid.startswith("b") else "A")
+            if args.policy == "snapshot_affinity":
+                # a late tail, arriving after every warm container has
+                # expired (and been captured): these invocations restore
+                # from the pool instead of prefilling
+                reqs += [Request(rid=f"t{i}", profile=PROFILES[p],
+                                 submit_s=12.0 + 0.5 * i)
+                         for i, p in enumerate(
+                             ("cnn", "bert", "bfs", "html"))]
+            if args.policy == "pinned":
+                router = Router(route_fn=lambda r, e:
+                                "B" if r.rid.startswith("b") else "A")
+            else:
+                router = Router(args.policy, broker=broker)
             m = ClusterSim(engines, router, broker).run(reqs,
                                                         max_virtual_s=2000)
             rep = m["broker"]["by_mode"].get(mode, {})
@@ -76,13 +114,20 @@ def main() -> None:
                   f"{float(np.percentile(stalls, 99)) * 1e3:12.2f} "
                   f"{rep.get('wall_seconds', 0.0) * 1e3:9.2f} "
                   f"{rep.get('migrated_bytes', 0) / 1024:11.1f} "
-                  f"{(m['latency_p99'] or 0):9.2f}")
+                  f"{(m['latency_p99'] or 0):9.2f} "
+                  f"{m['warm_hits']:5d} {m['restore_starts']:7d} "
+                  f"{m['broker']['squeezed_units']:8d}")
     print("\nThe broker reclaims the idle replica's memory for the loaded"
           "\none; HotMem makes that host-level steal zero-copy, the paged"
           "\nbaseline pays real migration bytes for the same elasticity —"
           "\nand the async reclaim pipeline removes the requester-visible"
           "\nstall entirely (stall_p99 -> 0): victims drain ReclaimOrders"
-          "\nbetween their own ticks while the requester keeps decoding.")
+          "\nbetween their own ticks while the requester keeps decoding."
+          "\nWith --policy snapshot_affinity the host also pools expired"
+          "\nwarm containers' prefix KV: later invocations restore from"
+          "\nthe pool instead of prefilling, and under pressure the"
+          "\nbroker squeezes those snapshot units first (metadata-only)"
+          "\nbefore ordering any VM to shrink.")
 
 
 if __name__ == "__main__":

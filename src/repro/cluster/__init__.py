@@ -1,10 +1,13 @@
 """Multi-replica host layer: broker (hypervisor role), router (FaaS
-front-end role), and the deterministic co-simulation that couples N
-``ServeEngine`` replicas over one host memory budget."""
+front-end role), the host-memory snapshot pool (warm-restart state), and
+the deterministic co-simulation that couples N ``ServeEngine`` replicas
+over one host memory budget."""
 from repro.cluster.host import (AlwaysGrantBroker, Grant, HostMemoryBroker,
                                 MemoryBroker, ReclaimOrder, StealRecord)
 from repro.cluster.router import Router
 from repro.cluster.sim import ClusterSim
+from repro.cluster.snapshots import Snapshot, SnapshotPool, SqueezeRecord
 
 __all__ = ["AlwaysGrantBroker", "Grant", "HostMemoryBroker", "MemoryBroker",
-           "ReclaimOrder", "StealRecord", "Router", "ClusterSim"]
+           "ReclaimOrder", "StealRecord", "Router", "ClusterSim",
+           "Snapshot", "SnapshotPool", "SqueezeRecord"]

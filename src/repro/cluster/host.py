@@ -53,10 +53,19 @@ granularity both managers share; HotMem replicas convert partitions to
 blocks at the boundary (1 partition = ``blocks_per_partition`` units).
 
 Conservation invariant (the test suite's anchor): at all times
-``free_units + sum(granted.values()) + escrow == budget_units`` where
-``escrow`` is the pending-delivery pool (units victims already drained into
-open grants that their requesters have not claimed yet) — the host never
+``free_units + sum(granted.values()) + escrow + snapshot_units ==
+budget_units`` where ``escrow`` is the pending-delivery pool (units victims
+already drained into open grants that their requesters have not claimed
+yet) and ``snapshot_units`` is the host snapshot pool's charge (persisted
+warm-restart state, see ``repro.cluster.snapshots``) — the host never
 double-grants a unit and never leaks one, even mid-order.
+
+Snapshot-squeeze-first reclaim rule: when a plug request outruns the free
+pool, the broker first drops LRU snapshots (``_squeeze_snapshots`` —
+metadata-only, zero migration, zero victim involvement) and only covers
+the *remaining* deficit with reclaim orders (async) or inline steals
+(sync).  While the pool can cover the grant, no ``ReclaimOrder`` reaches
+any replica.
 
 Pressure signal: ``pressure()`` = outstanding ordered-but-undrained units /
 budget; ``open_order_units(rid)`` is the per-victim view the router's
@@ -78,6 +87,7 @@ import time
 from typing import Any, Callable, Optional
 
 from repro.core.arena import ReclaimEvent
+from repro.cluster.snapshots import Snapshot, SnapshotPool, SqueezeRecord
 
 # victim-side reclaim callback: (k_units) -> (units_reclaimed, event|None)
 ReclaimFn = Callable[[int], tuple[int, Optional[ReclaimEvent]]]
@@ -179,6 +189,29 @@ class MemoryBroker:
         without the async order plane."""
         return 0
 
+    # Snapshot pool API: brokers without a host snapshot pool decline every
+    # offer and miss every lookup, so engines wired to them behave exactly
+    # as before the pool existed (warm state is simply discarded).
+    def snapshot_room(self, key: str, units: int) -> bool:
+        return False
+
+    def snapshot_put(self, key: str, *, units: int, payload: Any = None,
+                     tokens: int = 0, nbytes: int = 0,
+                     replica_id: str = "") -> bool:
+        return False
+
+    def snapshot_lookup(self, key: str) -> Optional[Snapshot]:
+        return None
+
+    def snapshot_available(self, key: str) -> bool:
+        return False
+
+    def snapshot_restorable(self, key: str) -> bool:
+        return False
+
+    def snapshot_units(self) -> int:
+        return 0
+
 
 class AlwaysGrantBroker(MemoryBroker):
     """Unmetered host: every plug request is granted in full.  Used by a
@@ -199,12 +232,21 @@ class HostMemoryBroker(MemoryBroker):
     under pressure — synchronously (legacy) or via async reclaim orders."""
 
     def __init__(self, budget_units: int, *, async_reclaim: bool = False,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 snapshot_pool_units: Optional[int] = None):
         assert budget_units > 0
         self.budget_units = budget_units
         self.free_units = budget_units
         self.async_reclaim = async_reclaim
         self._clock = clock if clock is not None else time.perf_counter
+        # host snapshot pool (None = disabled): warm-restart state charged
+        # against this same budget, squeezed FIRST under pressure
+        self.snapshots: Optional[SnapshotPool] = None
+        if snapshot_pool_units is not None:
+            assert snapshot_pool_units <= budget_units
+            self.snapshots = SnapshotPool(max_units=snapshot_pool_units)
+        self.squeeze_log: list[SqueezeRecord] = []
+        self._inline_reclaim = False     # sync steal in flight: pool fenced
         self.granted: dict[str, int] = {}
         self._reclaim: dict[str, ReclaimFn] = {}
         self._load: dict[str, Callable[[], int]] = {}
@@ -233,8 +275,13 @@ class HostMemoryBroker(MemoryBroker):
                  mode: Optional[str] = None,
                  order_sink: Optional[Callable[[ReclaimOrder], None]] = None,
                  ) -> None:
-        """VM boot: carve the replica's initial plug out of the free pool."""
+        """VM boot: carve the replica's initial plug out of the free pool
+        (squeezing snapshots first if the pool holds the needed slack —
+        a booting VM outranks cached warm-restart state)."""
         assert replica_id not in self.granted, replica_id
+        if initial_units > self.free_units:
+            self._squeeze_snapshots(initial_units - self.free_units,
+                                    requester=replica_id)
         assert initial_units <= self.free_units, \
             f"host budget exhausted registering {replica_id}: " \
             f"need {initial_units}, free {self.free_units}"
@@ -261,7 +308,9 @@ class HostMemoryBroker(MemoryBroker):
 
     def request_grant(self, replica_id: str, want: int) -> Grant:
         """virtio-mem plug: fill from the free pool immediately; cover any
-        deficit by reclaim — inline (sync) or via orders (async)."""
+        deficit by squeezing the snapshot pool (metadata-only, no victim
+        disturbed), then by reclaim — inline (sync) or via orders
+        (async)."""
         assert replica_id in self.granted, replica_id
         g = Grant(replica_id=replica_id, requested=max(want, 0))
         if want <= 0:
@@ -274,6 +323,18 @@ class HostMemoryBroker(MemoryBroker):
         deficit = want - take
         if deficit <= 0:
             return g
+        # snapshot-squeeze-first: cached warm-restart state is the host's
+        # bounded-lifetime region — drop it before disturbing any replica
+        if self._squeeze_snapshots(deficit, requester=replica_id):
+            take = min(deficit, self.free_units)
+            self.free_units -= take
+            self.granted[replica_id] += take
+            g.granted += take
+            deficit -= take
+        if deficit <= 0:
+            return g        # covered without a victim: like a free-pool
+            #                 fill, it leaves no stall sample (the stall
+            #                 series tracks requests that engaged reclaim)
         if self.async_reclaim:
             issued = self._issue_orders(replica_id, deficit, g)
             g.pending = issued
@@ -312,6 +373,108 @@ class HostMemoryBroker(MemoryBroker):
         if units > 0:
             self.granted[replica_id] -= units
             self.free_units += units
+
+    # ----------------------------------------------------- snapshot pool
+    def snapshot_room(self, key: str, units: int) -> bool:
+        """Would a ``units``-block snapshot for ``key`` fit right now?  A
+        same-key predecessor's charge and every LRU-evictable entry count
+        as reclaimable headroom; insertion never creates pressure (it only
+        spends free units), so the answer is also the engine's gate for
+        paying the copy-out at all.  Declines while a sync inline steal
+        is in flight: mid-steal free units belong to the open grant (see
+        ``_reclaim_from_idlest``)."""
+        if self.snapshots is None or units <= 0 or self._inline_reclaim:
+            return False
+        if not self.snapshots.fits(units):
+            return False
+        return units <= self.free_units + self.snapshots.units
+
+    def snapshot_put(self, key: str, *, units: int, payload: Any = None,
+                     tokens: int = 0, nbytes: int = 0,
+                     replica_id: str = "") -> bool:
+        """Persist a copied-out partition into the pool, charging ``units``
+        against the free pool.  A same-key predecessor is replaced; LRU
+        entries are evicted for cap/space; returns False (nothing changed)
+        when the snapshot cannot fit."""
+        if not self.snapshot_room(key, units):
+            return False
+        pool = self.snapshots
+        replacing = key in pool
+        self.free_units += pool.drop(key)        # same-key charge returns
+        if replacing:
+            pool.replaced += 1
+        while units > self.free_units or not (
+                pool.max_units is None
+                or pool.units + units <= pool.max_units):
+            evicted = pool.evict_lru()
+            assert evicted is not None, "room check promised space"
+            self.free_units += evicted.units
+        now = self._clock()
+        self.free_units -= units
+        pool.insert(Snapshot(key=key, units=units, tokens=tokens,
+                             nbytes=nbytes, payload=payload,
+                             replica_id=replica_id, created_at=now,
+                             last_used=now))
+        return True
+
+    def snapshot_lookup(self, key: str) -> Optional[Snapshot]:
+        """Restore-path fetch (refreshes LRU recency, counts hit/miss).
+        The snapshot stays pooled: one capture serves every later
+        invocation of the profile until evicted or replaced."""
+        if self.snapshots is None:
+            return None
+        return self.snapshots.lookup(key, now=self._clock())
+
+    def snapshot_available(self, key: str) -> bool:
+        """Entry-presence probe: no recency refresh, no accounting."""
+        return self.snapshots is not None \
+            and self.snapshots.peek(key) is not None
+
+    def snapshot_restorable(self, key: str) -> bool:
+        """Restore-feasibility probe (router + engine admission): the
+        entry must carry a payload to copy back.  Metadata-only entries
+        (non-engine producers: broker-level tests, benchmarks) are
+        *present* but not restorable — probing them here instead of via
+        ``snapshot_lookup`` keeps them off the hit counter and out of the
+        MRU slot, so dead entries stay first in squeeze order.  No recency
+        refresh, no accounting."""
+        if self.snapshots is None:
+            return False
+        snap = self.snapshots.peek(key)
+        return snap is not None and snap.payload is not None
+
+    def snapshot_drop(self, key: str) -> int:
+        """Explicitly invalidate ``key`` (tests / staleness): its charge
+        returns to the free pool.  Returns units freed."""
+        if self.snapshots is None:
+            return 0
+        freed = self.snapshots.drop(key)
+        self.free_units += freed
+        return freed
+
+    def snapshot_units(self) -> int:
+        """The pool's current charge against the host budget."""
+        return self.snapshots.units if self.snapshots is not None else 0
+
+    def _squeeze_snapshots(self, deficit: int, *, requester: str) -> int:
+        """The squeeze-first reclaim rule: drop LRU snapshots until
+        ``deficit`` is covered or the pool is empty.  Metadata-only — zero
+        bytes migrate, no replica is ordered to shrink, the freed units
+        land in the free pool immediately.  Returns units freed."""
+        if self.snapshots is None or deficit <= 0:
+            return 0
+        freed = 0
+        now = self._clock()
+        while freed < deficit:
+            snap = self.snapshots.evict_lru()
+            if snap is None:
+                break
+            freed += snap.units
+            self.squeeze_log.append(SqueezeRecord(
+                requester=requester, key=snap.key, units=snap.units,
+                nbytes=snap.nbytes, at=now))
+        self.free_units += freed
+        return freed
 
     # --------------------------------------------------- async order plane
     def _issue_orders(self, requester: str, deficit: int, grant: Grant
@@ -449,31 +612,45 @@ class HostMemoryBroker(MemoryBroker):
     def _reclaim_from_idlest(self, requester: str, deficit: int) -> float:
         """Host pressure, synchronous: shrink other replicas inline, idlest
         first (fewest in-flight invocations — the VM whose reclaim disturbs
-        least).  Returns the victim-side wall the requester waited for."""
+        least).  Returns the victim-side wall the requester waited for.
+
+        ``_inline_reclaim`` fences the snapshot pool for the duration:
+        every unit a victim surrenders here already belongs to the open
+        grant, so a victim's eviction path must not be able to divert
+        free units into a snapshot capture mid-steal (``snapshot_room``
+        declines, so the victim skips the readout entirely — and the
+        capture would be immediate squeeze-bait anyway)."""
         victims = sorted(
             (r for r in self.granted
              if r != requester and r in self._reclaim),
             key=lambda r: (self._load[r]() if r in self._load else 0, r))
         stall = 0.0
-        for v in victims:
-            if deficit <= 0:
-                break
-            t0 = self._clock()
-            got, ev = self._reclaim[v](deficit)
-            wall = ev.wall_seconds if ev is not None else self._clock() - t0
-            if got <= 0:
-                continue
-            assert got <= self.granted[v]
-            self.granted[v] -= got
-            self.free_units += got
-            deficit -= got
-            stall += wall
-            self.steal_log.append(StealRecord(
-                requester=requester, victim=v, units=got,
-                wall_seconds=wall,
-                reclaimed_bytes=ev.reclaimed_bytes if ev is not None else 0,
-                migrated_bytes=ev.migrated_bytes if ev is not None else 0,
-                mode=self._mode.get(v)))
+        self._inline_reclaim = True
+        try:
+            for v in victims:
+                if deficit <= 0:
+                    break
+                t0 = self._clock()
+                got, ev = self._reclaim[v](deficit)
+                wall = ev.wall_seconds if ev is not None \
+                    else self._clock() - t0
+                if got <= 0:
+                    continue
+                assert got <= self.granted[v]
+                self.granted[v] -= got
+                self.free_units += got
+                deficit -= got
+                stall += wall
+                self.steal_log.append(StealRecord(
+                    requester=requester, victim=v, units=got,
+                    wall_seconds=wall,
+                    reclaimed_bytes=(ev.reclaimed_bytes
+                                     if ev is not None else 0),
+                    migrated_bytes=(ev.migrated_bytes
+                                    if ev is not None else 0),
+                    mode=self._mode.get(v)))
+        finally:
+            self._inline_reclaim = False
         return stall
 
     # -------------------------------------------------------------- report
@@ -504,6 +681,11 @@ class HostMemoryBroker(MemoryBroker):
             "escrow_units": self.escrow_units(),
             "pressure": self.pressure(),
             "by_mode": by_mode,
+            "snapshot_units": self.snapshot_units(),
+            "snapshot_squeezes": len(self.squeeze_log),
+            "squeezed_units": sum(r.units for r in self.squeeze_log),
+            "snapshots": (self.snapshots.report()
+                          if self.snapshots is not None else None),
         }
 
     # ---------------------------------------------------------- invariants
@@ -512,8 +694,13 @@ class HostMemoryBroker(MemoryBroker):
         assert all(g >= 0 for g in self.granted.values())
         escrow = self.escrow_units()
         assert escrow >= 0
+        snapshot_units = self.snapshot_units()
+        assert snapshot_units >= 0
+        if self.snapshots is not None:
+            self.snapshots.check_invariants()
         assert self.free_units + sum(self.granted.values()) + escrow \
-            == self.budget_units, "host units leaked or double-granted"
+            + snapshot_units == self.budget_units, \
+            "host units leaked or double-granted"
         for o in self.orders.values():
             assert 0 <= o.filled + o.canceled <= o.units, o
             if o.open:

@@ -16,21 +16,45 @@ invocation must be assigned to one.  Policies:
                         the broker's pressure signal): routing onto a
                         draining victim both slows its drain and lands
                         the invocation on a shrinking arena.
+  * ``snapshot_affinity`` — warm row > host snapshot > any replica: a
+                        warm container is still the fastest start, but
+                        when none exists and the host snapshot pool holds
+                        the function's prefix KV (see
+                        ``repro.cluster.snapshots``), ANY replica can
+                        restore it — the pool is host-wide, à la
+                        TrEnv-X's remote snapshot pools — so the pick
+                        degrades to least-loaded among non-draining
+                        replicas (a restore adds memory demand, which a
+                        mid-reclaim victim should not absorb).
 
 Ties break on replica id, so routing is deterministic for a fixed trace.
 A custom ``route_fn(req, engines) -> replica_id`` overrides the policy
 (benchmarks use this to pin tenants to replicas).
 
 ``broker`` (optional) supplies the drain-awareness signal
-(``open_order_units``); ``ClusterSim`` wires its broker in automatically
-when the router was constructed without one.
+(``open_order_units``) and the restore-feasibility probe
+(``snapshot_restorable`` — entry present AND payload to copy back, so
+the router never predicts a restore that cannot happen); ``ClusterSim``
+wires its broker in automatically when the router was constructed
+without one.
+
+Accounting: ``warm_routes`` / ``snapshot_routes`` count ROUTE-TIME picks —
+the replica looked warm (resp. the pool held a snapshot) when the arrival
+was assigned.  They are predictions, not outcomes: keep-alive expiry can
+recycle the warm container (or pressure can squeeze the snapshot) before
+the invocation's ``submit_s`` arrives, in which case the engine silently
+cold-starts.  The authoritative hit counters live engine-side
+(``ServeEngine.warm_starts`` / ``restore_starts``, surfaced as
+``warm_hits`` / ``restore_starts`` in ``ClusterSim.metrics``): they count
+``_start_warm`` / ``_start_restore`` actually running.
 """
 from __future__ import annotations
 
 import random
 from typing import Callable, Optional
 
-POLICIES = ("least_loaded", "warm_affinity", "power_of_two")
+POLICIES = ("least_loaded", "warm_affinity", "power_of_two",
+            "snapshot_affinity")
 
 
 class Router:
@@ -43,7 +67,8 @@ class Router:
         self.broker = broker
         self._rng = random.Random(seed)
         self.routed: dict[str, int] = {}      # replica -> #assigned
-        self.warm_hits = 0
+        self.warm_routes = 0                  # route-time warm picks
+        self.snapshot_routes = 0              # route-time snapshot picks
         self.drain_avoided = 0                # times p2c dodged a victim
 
     def _score(self, rid: str, engines, backlog) -> tuple[int, str]:
@@ -58,6 +83,12 @@ class Router:
         fn = getattr(self.broker, "open_order_units", None)
         return fn(rid) if fn is not None else 0
 
+    def _snapshot_restorable(self, profile_name: str) -> bool:
+        if self.broker is None:
+            return False
+        fn = getattr(self.broker, "snapshot_restorable", None)
+        return bool(fn(profile_name)) if fn is not None else False
+
     def route(self, req, engines: dict, backlog: Optional[dict] = None
               ) -> str:
         """Pick the replica for ``req``.  ``backlog`` counts routed-but-
@@ -67,14 +98,22 @@ class Router:
             rid = self.route_fn(req, engines)
         else:
             rid = None
-            if self.policy == "warm_affinity":
+            if self.policy in ("warm_affinity", "snapshot_affinity"):
                 warm = [r for r, e in engines.items()
                         if e.warm.get(req.profile.name)]
                 if warm:
                     rid = min(warm,
                               key=lambda r: self._score(r, engines, backlog))
-                    self.warm_hits += 1
-            elif self.policy == "power_of_two":
+                    self.warm_routes += 1
+            if rid is None and self.policy == "snapshot_affinity" \
+                    and self._snapshot_restorable(req.profile.name):
+                # the pool is host-wide: any replica restores equally well,
+                # so spread by load but dodge mid-reclaim victims
+                rid = min(engines, key=lambda r: (
+                    1 if self._draining(r) else 0,
+                    self._score(r, engines, backlog)))
+                self.snapshot_routes += 1
+            elif rid is None and self.policy == "power_of_two":
                 ids = sorted(engines)
                 pair = ids if len(ids) <= 2 else self._rng.sample(ids, 2)
                 rid = min(pair, key=lambda r: (

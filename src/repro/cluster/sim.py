@@ -97,6 +97,7 @@ class ClusterSim:
         done = [r for e in self.engines.values() for r in e.done]
         lat = [r.latency for r in done
                if r.latency is not None and r.state is State.DONE]
+        engines = self.engines.values()
         out: dict[str, Any] = {
             "completed": sum(r.state is State.DONE for r in done),
             "killed": sum(r.state is State.KILLED for r in done),
@@ -108,6 +109,15 @@ class ClusterSim:
             "reclaim_events": sum(m["reclaim_events"] for m in per.values()),
             "per_replica": per,
             "routed": dict(self.router.routed),
+            # authoritative start-path counters (engine-side: the path that
+            # actually ran) vs the router's route-time predictions
+            "warm_hits": sum(getattr(e, "warm_starts", 0) for e in engines),
+            "restore_starts": sum(getattr(e, "restore_starts", 0)
+                                  for e in engines),
+            "cold_starts": sum(getattr(e, "cold_starts", 0)
+                               for e in engines),
+            "warm_routes": self.router.warm_routes,
+            "snapshot_routes": self.router.snapshot_routes,
         }
         if self.broker is not None:
             out["broker"] = self.broker.report()

@@ -1,0 +1,163 @@
+"""Host-memory snapshot pool: warm-restart state that outlives containers.
+
+An expired or suffix-evicted warm container used to discard its prefix KV,
+so the next invocation of the same function paid full prefill.  Following
+the serverless snapshot/restore fast path (TrEnv-X remote snapshot pools;
+the vHive snapshot study), the host instead keeps a copied-out partition
+per function profile in a *host-side* pool and restores it into a freshly
+admitted partition — cheaper than prefill, dearer than a warm adopt.
+
+The pool is exactly a Squeezy-style segregated region with bounded
+allocation lifetime: every byte in it is immediately droppable metadata
+(the authoritative state lives nowhere else), so under host pressure the
+broker reclaims snapshot units FIRST — an LRU drop is O(1) bookkeeping
+with zero migration and zero victim involvement — before ordering any VM
+to shrink.  ``SqueezeRecord`` logs those drops; the absence of
+``migrated_bytes``/``ReclaimOrder`` traffic while the pool can cover a
+grant is the property the tests pin down.
+
+Unit accounting: the pool is charged against the same host block budget as
+the replicas, extending the broker's conservation invariant to
+
+    free + sum(granted) + escrow + snapshot_units == budget
+
+``SnapshotPool`` itself is pure metadata + payload storage; all unit flows
+(free pool <-> snapshot charge) are orchestrated by ``HostMemoryBroker``
+so the invariant has a single owner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Optional
+
+
+@dataclasses.dataclass
+class Snapshot:
+    """One persisted prefix-KV partition, keyed by function profile."""
+    key: str                     # function profile name
+    units: int                   # host blocks charged against the budget
+    tokens: int = 0              # prefix tokens the payload carries
+    nbytes: int = 0              # payload bytes (the copy-out cost basis)
+    payload: Any = None          # host-side row caches (device_get'd tree)
+    replica_id: str = ""         # writer (informational: pool is host-wide)
+    created_at: float = 0.0
+    last_used: float = 0.0       # LRU recency stamp
+    restores: int = 0            # times copied back into a partition
+
+
+@dataclasses.dataclass
+class SqueezeRecord:
+    """One pressure-time snapshot reclaim: the broker dropped ``key`` to
+    cover ``requester``'s grant — metadata-only, zero migration, and no
+    ``ReclaimOrder`` reached any replica for these units."""
+    requester: str
+    key: str
+    units: int
+    nbytes: int
+    at: float                    # broker-clock timestamp
+
+
+class SnapshotPool:
+    """LRU pool of per-profile snapshots.  One snapshot per key (a newer
+    capture of the same function replaces the old one); eviction order is
+    least-recently-used, where both ``insert`` and ``lookup`` refresh
+    recency.  ``max_units`` caps the pool's total budget charge."""
+
+    def __init__(self, max_units: Optional[int] = None):
+        assert max_units is None or max_units > 0
+        self.max_units = max_units
+        self._by_key: "OrderedDict[str, Snapshot]" = OrderedDict()
+        # --- counters (reports read these) ---
+        self.inserts = 0
+        self.replaced = 0
+        self.evictions = 0           # LRU/squeeze drops (not replacements)
+        self.hits = 0
+        self.misses = 0
+
+    # -------------------------------------------------------------- queries
+    @property
+    def units(self) -> int:
+        return sum(s.units for s in self._by_key.values())
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._by_key
+
+    def keys(self):
+        return list(self._by_key)
+
+    def peek(self, key: str) -> Optional[Snapshot]:
+        """Availability probe: no recency refresh, no hit/miss accounting
+        (the router calls this per arrival)."""
+        return self._by_key.get(key)
+
+    def fits(self, units: int) -> bool:
+        """Cap check only: could a ``units``-block snapshot ever fit,
+        with every current entry evicted?  (Free-pool headroom is the
+        broker's side of the ``snapshot_room`` answer.)"""
+        return self.max_units is None or units <= self.max_units
+
+    # ------------------------------------------------------------ mutation
+    def lookup(self, key: str, now: float = 0.0) -> Optional[Snapshot]:
+        """Restore-path fetch: refresh recency, count the hit.  The
+        snapshot stays in the pool (one capture serves every later
+        invocation of the profile until evicted)."""
+        snap = self._by_key.get(key)
+        if snap is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        snap.last_used = now
+        snap.restores += 1
+        self._by_key.move_to_end(key)
+        return snap
+
+    def insert(self, snap: Snapshot) -> None:
+        """Store ``snap`` as the most recent entry.  The caller (broker)
+        has already dropped any same-key predecessor and charged
+        ``snap.units`` against the free pool."""
+        assert snap.key not in self._by_key, snap.key
+        assert snap.units > 0, snap
+        assert self.max_units is None or self.units + snap.units \
+            <= self.max_units, "pool cap overflow: caller must evict first"
+        self.inserts += 1
+        self._by_key[snap.key] = snap
+
+    def drop(self, key: str) -> int:
+        """Remove ``key``; returns the units to credit back.  Used for
+        same-key replacement (not counted as an eviction)."""
+        snap = self._by_key.pop(key, None)
+        return snap.units if snap is not None else 0
+
+    def evict_lru(self) -> Optional[Snapshot]:
+        """Drop the least-recently-used snapshot (squeeze/cap path)."""
+        if not self._by_key:
+            return None
+        _, snap = self._by_key.popitem(last=False)
+        self.evictions += 1
+        return snap
+
+    # ---------------------------------------------------------- invariants
+    def check_invariants(self) -> None:
+        assert all(s.units > 0 for s in self._by_key.values())
+        assert all(s.key == k for k, s in self._by_key.items())
+        if self.max_units is not None:
+            assert self.units <= self.max_units, \
+                f"pool holds {self.units} units over cap {self.max_units}"
+
+    # -------------------------------------------------------------- report
+    def report(self) -> dict[str, Any]:
+        return {
+            "count": len(self._by_key),
+            "units": self.units,
+            "max_units": self.max_units,
+            "inserts": self.inserts,
+            "replaced": self.replaced,
+            "evictions": self.evictions,
+            "hits": self.hits,
+            "misses": self.misses,
+            "keys": list(self._by_key),
+        }

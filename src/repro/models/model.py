@@ -105,6 +105,20 @@ def cache_num_rows(caches) -> int:
     raise ValueError("empty cache tree")
 
 
+def cache_read_row(caches, row: int):
+    """Gather arena row ``row`` out as a single-request cache (batch==1) —
+    the readout twin of ``cache_write_row``.  The snapshot copy-out path
+    pays this (then ``device_get``s the result to host memory), so the
+    bytes it touches are the realistic persist cost."""
+    out = {}
+    for key, sub in caches.items():
+        if key == "tail":
+            out[key] = jax.tree.map(lambda c: c[row:row + 1], sub)
+        else:
+            out[key] = jax.tree.map(lambda c: c[:, row:row + 1], sub)
+    return out
+
+
 def cache_write_row(caches, row_caches, row: int):
     """Scatter a single-request cache (batch==1) into arena row ``row``."""
     out = {}

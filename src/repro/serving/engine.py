@@ -5,6 +5,21 @@ into arena partitions, prefilled (cold start), batch-decoded (continuous
 batching), kept warm for ``keep_alive`` (idle container pool), recycled, and
 the arena is resized up/down a bucket ladder as demand moves (plug/unplug).
 
+Start paths, fastest first (each leaves its own ``StepEvent``):
+  warm_start — a kept-alive container's partition is re-bound by metadata
+               adoption (zero data movement, zero wall);
+  restore    — the host snapshot pool held the function's prefix KV (a warm
+               container expired earlier and its partition was copied out
+               instead of discarded); one host->device row write, no model
+               compute;
+  prefill    — cold start: full prompt forward pass.
+When a warm container expires past keep-alive, its partition is offered
+to the broker's snapshot pool first (``_offer_snapshot`` — a real device
+readout, paid in bytes and wall) and only then released.  Warm-suffix
+eviction under host pressure deliberately discards instead: at pressure
+time a capture would either divert the open grant's units or be squeezed
+right back (see ``_evict_warm_suffix``).
+
 Timebase: a *virtual clock* advanced by the measured wall time of every
 device operation (prefill, decode step, migration, zero-fill).  Arrivals are
 virtual-time stamped, so trace-driven benchmarks measure real relative costs
@@ -110,6 +125,13 @@ class ServeEngine:
         self.warm: dict[str, list[tuple[float, str, int]]] = {}
         self.done: list[Request] = []
         self.events: list[StepEvent] = []
+        # authoritative start-path counters: which admission path actually
+        # ran (the router's route-time picks are predictions, these are
+        # outcomes — see Router's accounting note)
+        self.cold_starts = 0
+        self.warm_starts = 0
+        self.restore_starts = 0
+        self._prof_tokens: dict[str, int] = {}   # profile -> prompt tokens
         self._row_req: dict[int, Request] = {}
         self._decode_jit: dict[int, Any] = {}       # rows -> compiled step
         self._prefill_jit: dict[int, Any] = {}      # prompt len -> compiled
@@ -201,6 +223,7 @@ class ServeEngine:
 
     # ------------------------------------------------------------- submit
     def submit(self, req: Request) -> None:
+        self._prof_tokens[req.profile.name] = req.profile.prompt_tokens
         self.pending.append(req)
 
     # -------------------------------------------------------------- admit
@@ -218,17 +241,24 @@ class ServeEngine:
                 continue
             got = self.arena.admit(req.rid)
             if got is None:
-                if self.mode == "vanilla":
-                    # paged admission is block-based; map to a virtual row
-                    still.append(req)
-                    continue
                 still.append(req)
                 continue
             row = got if self.mode != "vanilla" else self._alloc_row(req)
             if row is None:
                 still.append(req)
                 continue
-            self._start_cold(req, row)
+            # probe restore feasibility first (no accounting): the pool's
+            # hit / miss counters track restore fetches, not cold
+            # admissions, and a payload-less entry must not be
+            # MRU-refreshed by a lookup it can never serve
+            snap = self.broker.snapshot_lookup(req.profile.name) \
+                if self.mode == "hotmem" \
+                and self.broker.snapshot_restorable(req.profile.name) \
+                else None
+            if snap is not None:
+                self._start_restore(req, row, snap)
+            else:
+                self._start_cold(req, row)
         self.pending = still
 
     def _alloc_row(self, req) -> Optional[int]:
@@ -239,6 +269,18 @@ class ServeEngine:
             if r not in used:
                 return r
         return None
+
+    def _activate(self, req: Request, row: int) -> None:
+        """Shared tail of every start path (cold / warm / restore): the
+        prompt KV is resident in ``row``, bind the request and enter the
+        decode loop."""
+        prof = req.profile
+        self.arena.on_tokens(req.rid, prof.prompt_tokens)
+        req.position = prof.prompt_tokens
+        req.target_tokens = prof.prompt_tokens + prof.decode_tokens
+        req.state = State.RUNNING
+        self._row_req[row] = req
+        self.active[req.rid] = req
 
     def _start_cold(self, req: Request, row: int) -> None:
         req.partition = row
@@ -263,27 +305,41 @@ class ServeEngine:
         self.now += wall
         self.events.append(StepEvent(self.now, "prefill", wall,
                                      {"rid": req.rid}))
-        self.arena.on_tokens(req.rid, prof.prompt_tokens)
-        req.position = prof.prompt_tokens
-        req.target_tokens = prof.prompt_tokens + prof.decode_tokens
-        req.state = State.RUNNING
-        self._row_req[row] = req
-        self.active[req.rid] = req
+        self._activate(req, row)
+        self.cold_starts += 1
 
     def _start_warm(self, req: Request, old_rid: str, row: int) -> None:
         """Warm start: prompt KV still resident in the partition — skip
         prefill entirely (the paper's warm-container fast path).  The
         partition is re-bound by metadata adoption, zero data movement."""
-        prof = req.profile
         req.partition = row
         req.admitted_s = self.now
         self.arena.manager.adopt(old_rid, req.rid)
-        self.arena.on_tokens(req.rid, prof.prompt_tokens)
-        req.position = prof.prompt_tokens
-        req.target_tokens = prof.prompt_tokens + prof.decode_tokens
-        req.state = State.RUNNING
-        self._row_req[row] = req
-        self.active[req.rid] = req
+        self._activate(req, row)
+        self.warm_starts += 1
+        self.events.append(StepEvent(self.now, "warm_start", 0.0,
+                                     {"rid": req.rid, "row": row}))
+
+    def _start_restore(self, req: Request, row: int, snap) -> None:
+        """Snapshot restore: the function's prefix KV was persisted to the
+        host pool when its last warm container was recycled; copy it back
+        into the freshly admitted partition.  No prefill forward pass —
+        one host->device row write — so it is far cheaper than a cold
+        start but, unlike warm adoption, pays real copy bytes."""
+        req.partition = row
+        req.admitted_s = self.now
+        req.state = State.PREFILL
+        t0 = time.perf_counter()
+        row_caches = jax.tree.map(jnp.asarray, snap.payload)
+        self.caches = M.cache_write_row(self.caches, row_caches, row)
+        jax.block_until_ready(jax.tree.leaves(self.caches)[0])
+        wall = time.perf_counter() - t0
+        self.now += wall
+        self.events.append(StepEvent(self.now, "restore", wall,
+                                     {"rid": req.rid, "key": snap.key,
+                                      "bytes": snap.nbytes, "row": row}))
+        self._activate(req, row)
+        self.restore_starts += 1
 
     # -------------------------------------------------------------- decode
     def _decode(self) -> None:
@@ -291,9 +347,13 @@ class ServeEngine:
         toks = np.zeros((rows, 1), np.int32)
         pos = np.zeros((rows,), np.int32)
         for row, req in self._row_req.items():
-            if row < rows:
-                pos[row] = req.position
-        self._warm_decode(rows) if rows not in self._decode_jit else None
+            assert row < rows, \
+                f"active request {req.rid} bound to row {row} but the " \
+                f"arena holds only {rows} rows — a shrink dropped a live " \
+                f"row (free-suffix invariant violated)"
+            pos[row] = req.position
+        if rows not in self._decode_jit:
+            self._warm_decode(rows)
         t0 = time.perf_counter()
         logits, self.caches = self._decode_jit[rows](
             self.params, jnp.asarray(toks), jnp.asarray(pos), self.caches)
@@ -327,16 +387,59 @@ class ServeEngine:
             # KILLED was already force-released by the manager
 
     # ------------------------------------------------------------- elastic
+    def _offer_snapshot(self, prof_name: str, rid: str, row: int) -> bool:
+        """Persist an about-to-be-recycled warm partition to the host
+        snapshot pool instead of discarding its prefix KV.  The readout is
+        a real device gather + device->host copy, charged to this
+        replica's clock — paid only when the broker has room (brokers
+        without a pool decline for free, keeping the discard path
+        byte-identical to pre-snapshot behavior)."""
+        if self.mode != "hotmem":
+            return False            # prefix-KV rows are a hotmem concept
+        units = self.spec.blocks_per_partition
+        if not self.broker.snapshot_room(prof_name, units):
+            return False
+        t0 = time.perf_counter()
+        payload = jax.device_get(M.cache_read_row(self.caches, row))
+        wall = time.perf_counter() - t0
+        nbytes = int(sum(x.nbytes for x in jax.tree.leaves(payload)))
+        ok = self.broker.snapshot_put(
+            prof_name, units=units, payload=payload,
+            tokens=self._prof_tokens.get(prof_name, 0), nbytes=nbytes,
+            replica_id=self.replica_id)
+        if ok:
+            self.now += wall
+            self.events.append(StepEvent(self.now, "snapshot", wall,
+                                         {"key": prof_name, "rid": rid,
+                                          "bytes": nbytes, "row": row}))
+        return ok
+
     def _recycle_idle(self) -> None:
         """Recycle idle containers past keep-alive: release their
-        partitions/blocks (this is what makes memory reclaimable)."""
+        partitions/blocks (this is what makes memory reclaimable).  Each
+        expiring container's partition is first offered to the host
+        snapshot pool (warm-restart state outliving the container)."""
         for prof, entries in list(self.warm.items()):
-            fresh = []
-            for (t, rid, row) in entries:
-                if self.now - t < self.keep_alive:
-                    fresh.append((t, rid, row))
-                else:
-                    self.arena.finish(rid)
+            fresh = [e for e in entries
+                     if self.now - e[0] < self.keep_alive]
+            expired = [e for e in entries
+                       if self.now - e[0] >= self.keep_alive]
+            if expired and not self._reclaim_orders \
+                    and not self.broker.snapshot_restorable(prof):
+                # capture at most ONE expiring container per profile (the
+                # pool keys by profile — same-key replacement would throw
+                # away all but the last readout anyway), skip entirely
+                # when the pool already holds a restorable copy (per-
+                # profile KV is deterministic, so a re-capture would
+                # same-key-replace byte-identical content at the cost of
+                # a full device readout), and never mid-order-drain: the
+                # readout wall would lengthen the very drain the
+                # requester is waiting on, and the next pressured grant
+                # would squeeze the snapshot right back
+                t, rid, row = max(expired)       # newest expiring entry
+                self._offer_snapshot(prof, rid, row)
+            for (_, rid, _row) in expired:
+                self.arena.finish(rid)
             self.warm[prof] = fresh
 
     def _resize(self) -> None:
@@ -454,6 +557,15 @@ class ServeEngine:
                 need -= 1
             elif p in warm_rows:
                 t, prof, rid = warm_rows[p]
+                # deliberately NO snapshot capture here: warm-suffix
+                # eviction only ever runs under host pressure (sync
+                # inline steal or async order drain), where a capture
+                # would either divert the open grant's own units (sync —
+                # the broker fences the pool via _inline_reclaim) or
+                # lengthen the drain the requester is waiting on and be
+                # squeezed right back by the next pressured grant (pure
+                # churn).  Capture rides the keep-alive expiry path
+                # (_recycle_idle), which runs outside pressure.
                 self.arena.finish(rid)
                 self.warm[prof].remove((t, rid, p))
                 need -= 1
@@ -610,5 +722,10 @@ class ServeEngine:
             "reclaim_wall_s": sum(e.wall_seconds for e in reclaims),
             "decode_steps": sum(1 for e in self.events
                                 if e.kind == "decode"),
+            "cold_starts": self.cold_starts,
+            "warm_starts": self.warm_starts,
+            "restore_starts": self.restore_starts,
+            "snapshots_taken": sum(1 for e in self.events
+                                   if e.kind == "snapshot"),
             "events": self.events,
         }

@@ -1,5 +1,7 @@
+import itertools
 import os
 import sys
+from collections import deque
 
 # tests see ONE device; the 512-device flag is dryrun.py-only by design
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -40,3 +42,31 @@ def pytest_collection_modifyitems(config, items):
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+# Shared broker test helpers (imported by the cluster-layer test files —
+# one definition so the suites cannot silently diverge in what they
+# construct).
+
+
+def fake_clock():
+    """Monotonic deterministic clock: 1.0 per reading."""
+    c = itertools.count(1)
+    return lambda: float(next(c))
+
+
+def mk_async_broker(budget, replicas, *, loads=None, clock=None,
+                    pool_units=None):
+    """Async ``HostMemoryBroker`` + per-replica order queues (the
+    engines' order sinks)."""
+    from repro.cluster import HostMemoryBroker
+    broker = HostMemoryBroker(budget, async_reclaim=True,
+                              clock=clock or fake_clock(),
+                              snapshot_pool_units=pool_units)
+    sinks = {}
+    loads = loads or {}
+    for rid, units in replicas:
+        sinks[rid] = deque()
+        broker.register(rid, units, load=lambda r=rid: loads.get(r, 0),
+                        order_sink=sinks[rid].append, mode="hotmem")
+    return broker, sinks

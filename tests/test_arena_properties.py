@@ -25,7 +25,8 @@ SPEC = ArenaSpec(partition_tokens=64, n_partitions=8, block_tokens=16,
 
 OP_KINDS = ("reserve", "grow", "release", "fork", "plug", "unplug")
 
-BROKER_OP_KINDS = ("request", "drain", "release", "claim", "cancel")
+BROKER_OP_KINDS = ("request", "drain", "release", "claim", "cancel",
+                   "snap_put", "snap_get", "snap_drop")
 
 
 # ---------------------------------------------------------------- drivers
@@ -105,13 +106,15 @@ def _seeded_ops(seed, n_ops):
 def run_async_broker_ops(ops, n_replicas, budget=32):
     """Interpret an op stream against an async ``HostMemoryBroker`` across
     2–4 replicas: arbitrary interleavings of plug requests (grant + order
-    issuance), partial order fulfillments, natural releases, grant claims,
-    and cancels.  After EVERY op: the conservation invariant
-    ``free + granted + escrow == budget`` holds and no grant ever carries
-    more units than were requested."""
+    issuance, preceded by snapshot squeezes), partial order fulfillments,
+    natural releases, grant claims, cancels, and snapshot pool traffic
+    (insert / restore-lookup / drop).  After EVERY op: the conservation
+    invariant ``free + granted + escrow + snapshot_units == budget`` holds
+    and no grant ever carries more units than were requested."""
     clock = itertools.count(1)
     broker = HostMemoryBroker(budget, async_reclaim=True,
-                              clock=lambda: float(next(clock)))
+                              clock=lambda: float(next(clock)),
+                              snapshot_pool_units=budget // 2)
     rids = [f"v{i}" for i in range(n_replicas)]
     order_q = {r: deque() for r in rids}
     grants = {r: [] for r in rids}
@@ -148,6 +151,13 @@ def run_async_broker_ops(ops, n_replicas, budget=32):
             o = front_open(r)
             if o is not None:
                 broker.cancel_order(o.order_id)
+        elif kind == "snap_put":
+            broker.snapshot_put(f"k{b % 4}", units=1 + b % 4,
+                                nbytes=64 * (1 + b % 4), replica_id=r)
+        elif kind == "snap_get":
+            broker.snapshot_lookup(f"k{b % 4}")
+        elif kind == "snap_drop":
+            broker.snapshot_drop(f"k{b % 4}")
         broker.check_invariants()                # conservation, every event
         for glist in grants.values():
             for g in glist:

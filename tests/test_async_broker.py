@@ -14,7 +14,6 @@ after every event.  The three properties the tier pins down:
   (c) a victim finishing naturally fills/cancels the remainder of its
       open order without double-releasing units.
 """
-import itertools
 from collections import deque
 
 import pytest
@@ -23,23 +22,7 @@ from repro.cluster import ClusterSim, HostMemoryBroker, Router
 from repro.serving.request import PROFILES, Request, State
 
 
-def _fake_clock():
-    """Monotonic deterministic clock: 1.0 per reading."""
-    c = itertools.count(1)
-    return lambda: float(next(c))
-
-
-def _mk(budget, replicas, *, loads=None, clock=None):
-    """Async broker + per-replica order queues (the engines' order sinks)."""
-    broker = HostMemoryBroker(budget, async_reclaim=True,
-                              clock=clock or _fake_clock())
-    sinks = {}
-    loads = loads or {}
-    for rid, units in replicas:
-        sinks[rid] = deque()
-        broker.register(rid, units, load=lambda r=rid: loads.get(r, 0),
-                        order_sink=sinks[rid].append, mode="hotmem")
-    return broker, sinks
+from conftest import fake_clock as _fake_clock, mk_async_broker as _mk
 
 
 # ----------------------------------------------------- (a) conservation
@@ -100,6 +83,63 @@ def test_conservation_scripted_schedule():
     assert g.fulfilled <= g.requested
     assert broker.granted == {"a": 15, "b": 0, "c": 8}
     assert broker.free_units == 1
+
+
+def test_conservation_with_snapshot_interleaving():
+    """The extended conservation law ``free + granted + escrow +
+    snapshot_units == budget`` holds after EVERY event of a schedule
+    interleaving snapshot inserts/restores/drops with grants (and their
+    snapshot-first squeezes), partial order fills, claims, and cancels."""
+    broker, sinks = _mk(24, [("a", 8), ("b", 8)], pool_units=12)
+    broker.check_invariants()
+
+    assert broker.snapshot_put("cnn", units=3)     # free 8 -> 5
+    broker.check_invariants()
+    assert broker.snapshot_put("bert", units=4)    # free 5 -> 1
+    broker.check_invariants()
+    assert broker.snapshot_units() == 7
+
+    # a's plug: free pool (1) + squeeze BOTH snapshots (7) cover it fully
+    g = broker.request_grant("a", 6)
+    broker.check_invariants()
+    assert g.done and g.granted == 6
+    assert not sinks["a"] and not sinks["b"]       # pool covered: no order
+    assert broker.snapshot_units() == 0 and broker.free_units == 2
+    assert len(broker.squeeze_log) == 2
+
+    assert broker.snapshot_put("cnn", units=2)     # free 2 -> 0
+    broker.check_invariants()
+
+    # b's plug: squeeze the fresh snapshot, order only the remainder
+    g2 = broker.request_grant("b", 5)
+    broker.check_invariants()
+    assert g2.granted == 2 and g2.pending == 3
+    oa = sinks["a"][0]
+    assert (oa.victim, oa.units) == ("a", 3)
+
+    assert broker.fulfill_order(oa.order_id, 2) == 2   # escrow 2
+    broker.check_invariants()
+    # with escrow in flight and the pool empty, an insert cannot fit
+    assert not broker.snapshot_put("html", units=1)
+    broker.check_invariants()
+
+    assert broker.claim_grant(g2) == 2
+    broker.check_invariants()
+    assert broker.cancel_order(oa.order_id) == 1
+    broker.check_invariants()
+    assert g2.done
+
+    broker.release_units("a", 4)                   # order closed: -> pool
+    broker.check_invariants()
+    assert broker.snapshot_put("html", units=4)    # free 4 -> 0
+    broker.check_invariants()
+    snap = broker.snapshot_lookup("html")          # restore-path fetch
+    assert snap is not None and snap.restores == 1
+    broker.check_invariants()
+    assert broker.snapshot_drop("html") == 4       # charge returns
+    broker.check_invariants()
+    assert broker.granted == {"a": 8, "b": 12}
+    assert broker.free_units == 4 and broker.snapshot_units() == 0
 
 
 def test_request_grant_fills_from_pool_first():

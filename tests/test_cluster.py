@@ -141,7 +141,9 @@ def test_router_warm_affinity():
     engines = {"a": _FakeEngine(0), "b": _FakeEngine(5, warm=("cnn",))}
     r = Router("warm_affinity")
     assert r.route(_Req("cnn"), engines) == "b"        # warm beats load
-    assert r.warm_hits == 1
+    assert r.warm_routes == 1                          # route-TIME pick:
+    # whether the invocation actually warm-starts is counted engine-side
+    # (``warm_starts``) — see test_warm_hit_accounting_route_vs_start
     assert r.route(_Req("bert"), engines) == "a"       # no warm -> least
 
 

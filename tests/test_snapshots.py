@@ -1,0 +1,577 @@
+"""Host-memory snapshot pool: warm-restart persistence + the
+squeeze-first reclaim rule.
+
+Fast tests drive the pool and broker as pure metadata (every event
+followed by ``check_invariants``, which now enforces the extended
+conservation law ``free + granted + escrow + snapshot_units == budget``).
+The properties pinned down:
+
+  (a) under pressure the broker squeezes snapshot units FIRST — while the
+      pool can cover a grant, zero bytes migrate and no ``ReclaimOrder``
+      reaches any replica;
+  (b) pool bookkeeping: LRU eviction, same-key replacement, cap and
+      free-pool bounds, lookup recency;
+  (c) ``snapshot_affinity`` routing: warm row > host-wide snapshot > any
+      replica (dodging mid-reclaim victims).
+
+The ``slow``-marked tests run a real ``ServeEngine``: capture on
+keep-alive expiry, restore on admission (with the cold/warm/restore cost
+ordering), bit-identity of a restored partition vs the warm-adopt path,
+the row-skew decode assertion, and the warm-hit accounting fix
+(route-time prediction vs engine-side outcome).
+"""
+from collections import deque
+
+import pytest
+
+from repro.cluster import HostMemoryBroker, Router, SnapshotPool
+from repro.core.arena import ArenaSpec
+from repro.serving.request import PROFILES, Request
+
+
+from conftest import fake_clock as _fake_clock, \
+    mk_async_broker as _mk_async
+
+
+# ------------------------------------------- (a) squeeze-first reclaim
+
+
+def test_squeeze_covers_grant_without_any_reclaim_order():
+    """THE acceptance property: while the pool can cover the deficit, the
+    grant is filled by dropping snapshots — metadata-only (no steal, no
+    migration, no order sink called) — and the requester never stalls."""
+    broker, sinks = _mk_async(16, [("a", 4), ("b", 4)], pool_units=8)
+    broker.check_invariants()
+    assert broker.snapshot_put("cnn", units=3, nbytes=100)
+    broker.check_invariants()
+    assert broker.snapshot_put("bert", units=3, nbytes=100)
+    broker.check_invariants()
+    assert broker.free_units == 2 and broker.snapshot_units() == 6
+
+    g = broker.request_grant("a", 6)           # free 2 + squeeze the rest
+    broker.check_invariants()
+    assert g.granted == 6 and g.pending == 0 and g.done
+    assert not sinks["a"] and not sinks["b"], "ReclaimOrder issued while " \
+        "the snapshot pool could cover the grant"
+    assert not broker.steal_log                # zero migration, zero steal
+    assert broker.request_stalls == []         # no reclaim engaged: the
+    #                                            stall series stays empty,
+    #                                            same as a free-pool fill
+    assert len(broker.squeeze_log) == 2        # cnn then bert (LRU order)
+    assert [r.key for r in broker.squeeze_log] == ["cnn", "bert"]
+    assert sum(r.units for r in broker.squeeze_log) == 6
+    assert broker.snapshot_units() == 0
+    rep = broker.report()
+    assert rep["snapshot_squeezes"] == 2 and rep["squeezed_units"] == 6
+
+
+def test_squeeze_partial_then_orders_for_remainder():
+    """A pool that covers only part of the deficit is drained first; the
+    reclaim orders that follow are sized to the REMAINDER only."""
+    broker, sinks = _mk_async(14, [("a", 4), ("b", 8)], pool_units=4)
+    assert broker.snapshot_put("cnn", units=2)
+    broker.check_invariants()
+    assert broker.free_units == 0
+    g = broker.request_grant("a", 5)           # squeeze 2, order 3
+    broker.check_invariants()
+    assert g.granted == 2 and g.pending == 3
+    assert len(sinks["b"]) == 1 and sinks["b"][0].units == 3
+    assert broker.snapshot_units() == 0
+    assert [r.units for r in broker.squeeze_log] == [2]
+
+
+def test_sync_broker_squeezes_before_inline_steal():
+    """Sync mode: the pool absorbs the pressure before any victim's
+    reclaim callback runs (and the requester-visible stall stays 0)."""
+    calls = []
+
+    def reclaim(k):
+        calls.append(k)
+        return min(k, 4), None
+
+    broker = HostMemoryBroker(12, clock=_fake_clock(),
+                              snapshot_pool_units=6)
+    broker.register("a", 4)
+    broker.register("b", 4, reclaim=reclaim, load=lambda: 0)
+    assert broker.snapshot_put("cnn", units=4)     # free 4 -> 0
+    broker.check_invariants()
+    g = broker.request_grant("a", 6)           # squeezed 4 + stolen 2
+    broker.check_invariants()
+    # pool covered 4 of the 6; only the remaining 2 engaged the victim
+    assert g.granted == 6
+    assert calls == [2]
+    assert broker.snapshot_units() == 0
+    # a fully pool-covered request never invokes the callback at all
+    broker.release_units("a", 2)               # free 2
+    assert broker.snapshot_put("bert", units=2)
+    g2 = broker.request_grant("a", 2)          # free 0: pure squeeze
+    broker.check_invariants()
+    assert g2.granted == 2 and calls == [2] and g2.stall_seconds == 0.0
+
+
+def test_pool_fenced_during_inline_steal():
+    """Mid-sync-steal, every unit a victim surrenders already belongs to
+    the open grant: a victim's eviction path must not divert free units
+    into a snapshot capture (``snapshot_room``/``snapshot_put`` decline
+    while the inline reclaim is in flight), so the requester is never
+    short-changed by its own steal."""
+    broker = HostMemoryBroker(12, clock=_fake_clock(),
+                              snapshot_pool_units=6)
+
+    def reclaim(k):
+        # victim tries to persist a warm partition mid-steal (what
+        # _evict_warm_suffix would attempt): the fenced pool declines
+        assert not broker.snapshot_room("cnn", 2)
+        assert not broker.snapshot_put("cnn", units=2)
+        return min(k, 4), None
+
+    broker.register("a", 4)
+    broker.register("b", 8, reclaim=reclaim, load=lambda: 0)
+    g = broker.request_grant("a", 4)           # free 0: inline steal
+    broker.check_invariants()
+    assert g.granted == 4                      # nothing was diverted
+    assert broker.snapshot_units() == 0
+    # the fence lifts with the steal: the same put succeeds afterwards
+    broker.release_units("a", 2)
+    assert broker.snapshot_put("cnn", units=2)
+    broker.check_invariants()
+
+
+def test_register_squeezes_pool_for_boot():
+    """A booting VM outranks cached warm-restart state: registration
+    squeezes the pool when the free pool alone cannot cover the plug."""
+    broker = HostMemoryBroker(8, clock=_fake_clock(), snapshot_pool_units=8)
+    broker.register("a", 4)
+    assert broker.snapshot_put("cnn", units=4)
+    broker.check_invariants()
+    assert broker.free_units == 0
+    broker.register("b", 4)                    # squeezed, not refused
+    broker.check_invariants()
+    assert broker.granted == {"a": 4, "b": 4}
+    assert broker.snapshot_units() == 0
+    assert [r.requester for r in broker.squeeze_log] == ["b"]
+
+
+# --------------------------------------------------- (b) pool bookkeeping
+
+
+def test_snapshot_put_replaces_same_key_and_respects_cap():
+    broker = HostMemoryBroker(10, clock=_fake_clock(),
+                              snapshot_pool_units=4)
+    broker.register("a", 2)                    # free 8
+    assert broker.snapshot_put("cnn", units=2)
+    broker.check_invariants()
+    assert broker.snapshot_put("cnn", units=3)     # replace, not stack
+    broker.check_invariants()
+    assert broker.snapshot_units() == 3
+    assert broker.snapshots.replaced == 1
+    # cap 4: inserting bert(2) evicts LRU (cnn) rather than overflowing
+    assert broker.snapshot_put("bert", units=2)
+    broker.check_invariants()
+    assert broker.snapshot_units() == 2
+    assert not broker.snapshot_available("cnn")
+    assert broker.snapshot_available("bert")
+    # over the cap entirely: rejected, nothing mutated
+    before = broker.report()["snapshots"]
+    assert not broker.snapshot_put("html", units=5)
+    broker.check_invariants()
+    assert broker.report()["snapshots"] == before
+
+
+def test_snapshot_put_bounded_by_free_plus_pool():
+    """Insertion only spends free units (plus what eviction recovers) —
+    it can never create pressure on the replicas."""
+    broker = HostMemoryBroker(10, clock=_fake_clock(),
+                              snapshot_pool_units=10)
+    broker.register("a", 7)                    # free 3
+    assert broker.snapshot_put("cnn", units=2)
+    broker.check_invariants()
+    # free 1, pool 2: a 4-unit snapshot cannot fit anywhere
+    assert not broker.snapshot_room("html", 4)
+    assert not broker.snapshot_put("html", units=4)
+    broker.check_invariants()
+    assert broker.snapshot_available("cnn")    # untouched by the refusal
+    # 3 units fit by evicting the LRU entry
+    assert broker.snapshot_put("html", units=3)
+    broker.check_invariants()
+    assert not broker.snapshot_available("cnn")
+    assert broker.snapshot_units() == 3
+
+
+def test_snapshot_lookup_refreshes_lru_order():
+    broker = HostMemoryBroker(10, clock=_fake_clock(),
+                              snapshot_pool_units=10)
+    broker.register("a", 4)
+    assert broker.snapshot_put("cnn", units=2)
+    assert broker.snapshot_put("bert", units=2)
+    snap = broker.snapshot_lookup("cnn")       # touch: cnn becomes MRU
+    assert snap is not None and snap.restores == 1
+    broker._squeeze_snapshots(1, requester="a")
+    broker.check_invariants()
+    assert broker.snapshot_available("cnn")    # survivor: recently used
+    assert not broker.snapshot_available("bert")
+    pool = broker.snapshots
+    assert pool.hits == 1
+    assert broker.snapshot_lookup("nope") is None
+    assert pool.misses == 1
+
+
+def test_snapshot_drop_and_disabled_pool():
+    broker = HostMemoryBroker(10, clock=_fake_clock(),
+                              snapshot_pool_units=10)
+    broker.register("a", 4)
+    assert broker.snapshot_put("cnn", units=2)
+    assert broker.snapshot_drop("cnn") == 2
+    broker.check_invariants()
+    assert broker.free_units == 6 and broker.snapshot_units() == 0
+    assert broker.snapshot_drop("cnn") == 0
+    # default broker: pool disabled, every verb is a cheap no
+    plain = HostMemoryBroker(10)
+    plain.register("a", 4)
+    assert not plain.snapshot_room("cnn", 1)
+    assert not plain.snapshot_put("cnn", units=1)
+    assert plain.snapshot_lookup("cnn") is None
+    assert not plain.snapshot_available("cnn")
+    assert plain.snapshot_units() == 0
+    plain.check_invariants()
+
+
+def test_pool_unit_invariants_direct():
+    pool = SnapshotPool(max_units=4)
+    with pytest.raises(AssertionError):
+        SnapshotPool(max_units=0)
+    assert pool.evict_lru() is None
+    assert pool.drop("nope") == 0
+    assert len(pool) == 0 and pool.units == 0
+    pool.check_invariants()
+
+
+# -------------------------------------------------- (c) snapshot routing
+
+
+class _FakeEngine:
+    def __init__(self, load, warm=()):
+        self._load = load
+        self.warm = {name: [(0.0, "rid", 0)] for name in warm}
+
+    def load(self):
+        return self._load
+
+
+def _req(profile):
+    return Request(rid="x", profile=PROFILES[profile], submit_s=0.0)
+
+
+def test_snapshot_affinity_warm_beats_snapshot():
+    broker = HostMemoryBroker(10, clock=_fake_clock(),
+                              snapshot_pool_units=10)
+    broker.register("a", 2)
+    broker.register("b", 2)
+    assert broker.snapshot_put("cnn", units=2, payload=object())
+    engines = {"a": _FakeEngine(0), "b": _FakeEngine(5, warm=("cnn",))}
+    r = Router("snapshot_affinity", broker=broker)
+    assert r.route(_req("cnn"), engines) == "b"     # warm row first
+    assert r.warm_routes == 1 and r.snapshot_routes == 0
+
+
+def test_snapshot_affinity_snapshot_then_fallback():
+    broker = HostMemoryBroker(10, clock=_fake_clock(),
+                              snapshot_pool_units=10)
+    broker.register("a", 2)
+    broker.register("b", 2)
+    assert broker.snapshot_put("bert", units=2, payload=object())
+    engines = {"a": _FakeEngine(1), "b": _FakeEngine(4)}
+    r = Router("snapshot_affinity", broker=broker)
+    # pool is host-wide: any replica restores; least-loaded wins
+    assert r.route(_req("bert"), engines) == "a"
+    assert r.snapshot_routes == 1
+    # no warm row, no snapshot: plain least-loaded, not counted
+    assert r.route(_req("html"), engines) == "a"
+    assert r.snapshot_routes == 1 and r.warm_routes == 0
+
+
+def test_snapshot_affinity_dodges_draining_victim():
+    """A restore adds memory demand — never aim it at a replica that is
+    mid-reclaim (open order), even if that replica is less loaded."""
+    broker, sinks = _mk_async(8, [("a", 2), ("b", 6)], pool_units=8)
+    # b requests more than free: an order lands on a (a is now draining)
+    broker.request_grant("b", 3)
+    assert broker.open_order_units("a") > 0
+    # b's workload later shrinks; a warm expiry then pools a snapshot
+    # while a's order is still open
+    broker.release_units("b", 2)
+    assert broker.snapshot_put("cnn", units=1, payload=object())
+    engines = {"a": _FakeEngine(0), "b": _FakeEngine(5)}
+    r = Router("snapshot_affinity", broker=broker)
+    assert r.route(_req("cnn"), engines) == "b"     # dodges the victim
+    assert r.snapshot_routes == 1
+
+
+def test_metadata_only_entry_present_but_not_restorable():
+    """A payload-less entry (non-engine producer) is *present* in the
+    pool but can never serve a restore: the restorable probe rejects it
+    without touching the hit counter or the MRU slot, and the router
+    falls back to plain least-loaded instead of predicting an impossible
+    restore."""
+    broker = HostMemoryBroker(10, clock=_fake_clock(),
+                              snapshot_pool_units=10)
+    broker.register("a", 2)
+    broker.register("b", 2)
+    assert broker.snapshot_put("cnn", units=2)              # metadata-only
+    assert broker.snapshot_put("bert", units=2, payload=object())
+    assert broker.snapshot_available("cnn")
+    assert not broker.snapshot_restorable("cnn")
+    assert broker.snapshot_restorable("bert")
+    # probing never refreshes recency or counts a hit
+    for _ in range(3):
+        broker.snapshot_restorable("cnn")
+    assert broker.snapshots.hits == 0
+    assert broker.snapshots.keys()[0] == "cnn"  # still first in LRU order
+    engines = {"a": _FakeEngine(1), "b": _FakeEngine(4)}
+    r = Router("snapshot_affinity", broker=broker)
+    assert r.route(_req("cnn"), engines) == "a"  # plain least-loaded
+    assert r.snapshot_routes == 0                # no impossible prediction
+
+
+# --------------------------------------------- engine integration (slow)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+    from repro.configs.base import get_config, reduced
+    from repro.models import model as M
+    cfg = reduced(get_config("qwen2-7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    spec = ArenaSpec.from_model(cfg, partition_tokens=128, n_partitions=8,
+                                block_tokens=32)
+    return cfg, params, spec
+
+
+def _run_one(eng, rid, prof="cnn"):
+    eng.submit(Request(rid=rid, profile=PROFILES[prof], submit_s=eng.now))
+    empty = deque()
+    while eng.active or eng.pending:
+        eng._tick(empty)
+    return next(r for r in eng.done if r.rid == rid)
+
+
+@pytest.mark.slow
+def test_snapshot_capture_and_restore_end_to_end(setup):
+    """Cold -> warm -> expiry (capture) -> restore, on one engine: the
+    pool holds the expired container's prefix KV, a later invocation of
+    the same function restores instead of prefilling, and the three start
+    paths cost prefill > restore > warm (zero)."""
+    from repro.serving.engine import ServeEngine
+    cfg, params, spec = setup
+    bpp = spec.blocks_per_partition
+    broker = HostMemoryBroker(budget_units=12 * bpp,
+                              snapshot_pool_units=4 * bpp)
+    eng = ServeEngine(cfg, params, spec, mode="hotmem", keep_alive=2.0,
+                      seed=0, broker=broker, replica_id="A")
+    _run_one(eng, "c0")                        # cold (prefill)
+    _run_one(eng, "w0")                        # warm adopt (same profile)
+    assert eng.cold_starts == 1 and eng.warm_starts == 1
+    warm_evs = [e for e in eng.events if e.kind == "warm_start"]
+    assert len(warm_evs) == 1 and warm_evs[0].wall_s == 0.0
+
+    eng.now += eng.keep_alive + 1.0            # container expires
+    eng._recycle_idle()
+    broker.check_invariants()
+    assert broker.snapshot_available("cnn")
+    snap_evs = [e for e in eng.events if e.kind == "snapshot"]
+    assert len(snap_evs) == 1
+    assert snap_evs[0].detail["bytes"] > 0 and snap_evs[0].wall_s > 0
+    assert broker.snapshot_units() == bpp      # one partition charged
+
+    _run_one(eng, "s0")                        # restore from the pool
+    broker.check_invariants()
+    assert eng.restore_starts == 1 and eng.cold_starts == 1
+    rest_evs = [e for e in eng.events if e.kind == "restore"]
+    assert len(rest_evs) == 1 and rest_evs[0].detail["key"] == "cnn"
+    # cost ordering: prefill > restore copy > warm adopt (zero)
+    prefill_wall = max(e.wall_s for e in eng.events if e.kind == "prefill")
+    assert 0.0 < rest_evs[0].wall_s < prefill_wall
+    # the snapshot stays pooled: a second post-expiry invocation restores
+    # again (one capture serves every later cold start of the profile)
+    eng.now += eng.keep_alive + 1.0
+    eng._recycle_idle()
+    _run_one(eng, "s1")
+    assert eng.restore_starts == 2
+    m = eng.metrics()
+    assert m["warm_starts"] == 1 and m["restore_starts"] == 2
+    assert m["cold_starts"] == 1
+
+
+@pytest.mark.slow
+def test_restore_bit_identical_to_warm_adopt(setup):
+    """The restored partition is byte-for-byte the state a warm adopt
+    would have reused, so decode from it is bit-identical."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.models import model as M
+    from repro.serving.engine import ServeEngine
+    cfg, params, spec = setup
+    bpp = spec.blocks_per_partition
+    broker = HostMemoryBroker(budget_units=12 * bpp,
+                              snapshot_pool_units=4 * bpp)
+    eng = ServeEngine(cfg, params, spec, mode="hotmem", keep_alive=2.0,
+                      seed=0, broker=broker, replica_id="A")
+    _run_one(eng, "c0")
+    (_, _, row) = eng.warm["cnn"][0]
+    warm_state = jax.device_get(M.cache_read_row(eng.caches, row))
+
+    eng.now += eng.keep_alive + 1.0
+    eng._recycle_idle()                        # capture on expiry
+    snap = broker.snapshots.peek("cnn")
+    assert snap is not None
+    for a, b in zip(jax.tree.leaves(warm_state),
+                    jax.tree.leaves(snap.payload)):
+        assert a.dtype == b.dtype and np.array_equal(a, b)
+
+    # restore lands the same bytes in the fresh partition
+    eng.submit(Request(rid="s0", profile=PROFILES["cnn"], submit_s=eng.now))
+    eng._try_admit()
+    assert eng.restore_starts == 1
+    row2 = eng.active["s0"].partition
+    restored = jax.device_get(M.cache_read_row(eng.caches, row2))
+    for a, b in zip(jax.tree.leaves(warm_state), jax.tree.leaves(restored)):
+        assert np.array_equal(a, b)
+
+    # and one decode step from either state is bit-identical
+    prof = PROFILES["cnn"]
+    toks = jnp.zeros((1, 1), jnp.int32)
+    pos = jnp.full((1,), prof.prompt_tokens, jnp.int32)
+    la, _ = M.decode_step(cfg, params, toks, pos,
+                          jax.tree.map(jnp.asarray, warm_state))
+    lb, _ = M.decode_step(cfg, params, toks, pos,
+                          jax.tree.map(jnp.asarray, restored))
+    assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+@pytest.mark.slow
+def test_shrink_under_load_keeps_live_rows_in_range(setup):
+    """Regression for the silent row-skew guard: a broker-initiated
+    shrink with a live request in flight must leave every bound row
+    inside the arena, and the next decode proceeds (no skew, no
+    assertion)."""
+    from repro.serving.engine import ServeEngine
+    cfg, params, spec = setup
+    bpp = spec.blocks_per_partition
+    eng = ServeEngine(cfg, params, spec, mode="hotmem", keep_alive=1e9,
+                      seed=0, prewarm=False)
+    eng.submit(Request(rid="r0", profile=PROFILES["cnn"], submit_s=0.0))
+    eng._try_admit()                           # live on row 0
+    assert list(eng._row_req) == [0]
+    eng._grow_and_sync(2, via_gate=True)       # 2 -> 4 rows
+    for i in (1, 2, 3):                        # park warm rows above
+        row = eng.arena.admit(f"w{i}")
+        eng.warm.setdefault("cnn", []).append((0.0, f"w{i}", row))
+    got, ev = eng.reclaim_for_broker(2 * bpp)  # shrink under load
+    assert got == 2 * bpp and ev.migrated_bytes == 0
+    rows = eng._rows()
+    assert rows == 2
+    assert all(r < rows for r in eng._row_req)
+    eng._decode()                              # decodes, no assertion
+    assert eng.active["r0"].position == PROFILES["cnn"].prompt_tokens + 1
+
+
+@pytest.mark.slow
+def test_decode_asserts_on_row_skew(setup):
+    """The silent ``if row < rows`` guard is gone: a live request bound
+    outside the arena is an invariant violation, surfaced loudly instead
+    of decoding a wrong row at position 0."""
+    from repro.serving.engine import ServeEngine
+    cfg, params, spec = setup
+    eng = ServeEngine(cfg, params, spec, mode="hotmem", keep_alive=1e9,
+                      seed=0, prewarm=False)
+    eng.submit(Request(rid="r0", profile=PROFILES["cnn"], submit_s=0.0))
+    eng._try_admit()
+    req = eng.active["r0"]
+    del eng._row_req[0]
+    eng._row_req[99] = req                     # corrupt: row out of range
+    with pytest.raises(AssertionError, match="arena holds only"):
+        eng._decode()
+
+
+@pytest.mark.slow
+def test_warm_hit_accounting_route_vs_start(setup):
+    """The over-counting fix: the router's warm pick is a route-time
+    PREDICTION; keep-alive expiry before the arrival recycles the
+    container and the engine cold-starts.  The authoritative counter
+    (``warm_starts``) stays 0 while ``warm_routes`` recorded the pick."""
+    from repro.serving.engine import ServeEngine
+    cfg, params, spec = setup
+    bpp = spec.blocks_per_partition
+    broker = HostMemoryBroker(budget_units=12 * bpp)   # no snapshot pool
+    eng = ServeEngine(cfg, params, spec, mode="hotmem", keep_alive=2.0,
+                      seed=0, broker=broker, replica_id="A")
+    _run_one(eng, "c0")
+    assert eng.warm["cnn"]                     # warm row parked
+    router = Router("warm_affinity")
+    late = Request(rid="r1", profile=PROFILES["cnn"],
+                   submit_s=eng.now + 10.0)
+    assert router.route(late, {"A": eng}) == "A"
+    assert router.warm_routes == 1             # predicted warm...
+    eng.now += eng.keep_alive + 1.0
+    eng._recycle_idle()                        # ...but the container died
+    late.submit_s = eng.now
+    eng.run([late])
+    assert eng.warm_starts == 0                # outcome: cold start
+    assert eng.cold_starts == 2
+    assert not any(e.kind == "warm_start" for e in eng.events)
+
+
+@pytest.mark.slow
+def test_recycle_idle_skips_capture_mid_order_drain(setup):
+    """Anti-churn rule on the expiry path (mirrors warm-suffix eviction):
+    while the engine holds open reclaim orders, keep-alive expiry must
+    NOT pay a snapshot capture — the readout would lengthen the very
+    drain the requester is waiting on, and the next pressured grant would
+    squeeze the snapshot right back."""
+    from repro.cluster.host import ReclaimOrder
+    from repro.serving.engine import ServeEngine
+    cfg, params, spec = setup
+    bpp = spec.blocks_per_partition
+    broker = HostMemoryBroker(budget_units=12 * bpp,
+                              snapshot_pool_units=4 * bpp)
+    eng = ServeEngine(cfg, params, spec, mode="hotmem", keep_alive=2.0,
+                      seed=0, broker=broker, replica_id="A")
+    _run_one(eng, "c0")
+    assert eng.warm["cnn"]                     # warm row parked
+    eng._reclaim_orders.append(ReclaimOrder(
+        order_id=99, victim="A", requester="B", units=bpp))
+    eng.now += eng.keep_alive + 1.0
+    eng._recycle_idle()                        # expiry while draining
+    assert not any(e.kind == "snapshot" for e in eng.events)
+    assert broker.snapshot_units() == 0        # nothing was pooled
+    eng._reclaim_orders.clear()                # detach the fake order
+
+
+@pytest.mark.slow
+def test_recycle_idle_captures_once_per_profile(setup):
+    """N same-profile containers expiring in one sweep pay ONE readout:
+    the pool keys by profile, so same-key replacement would discard all
+    but the last capture — the other N-1 device gathers would be pure
+    wasted wall on the virtual clock."""
+    from repro.serving.engine import ServeEngine
+    cfg, params, spec = setup
+    bpp = spec.blocks_per_partition
+    broker = HostMemoryBroker(budget_units=12 * bpp,
+                              snapshot_pool_units=4 * bpp)
+    eng = ServeEngine(cfg, params, spec, mode="hotmem", keep_alive=2.0,
+                      seed=0, broker=broker, replica_id="A")
+    _run_one(eng, "c0")
+    _run_one(eng, "c1")                        # both park warm 'cnn' rows
+    # c1 adopts c0's row, so make sure TWO distinct rows sit warm
+    while len(eng.warm["cnn"]) < 2:
+        n = len(eng.warm["cnn"])
+        row = eng.arena.admit(f"w{n}")
+        eng.warm["cnn"].append((eng.now, f"w{n}", row))
+    eng.now += eng.keep_alive + 1.0
+    eng._recycle_idle()
+    snaps = [e for e in eng.events if e.kind == "snapshot"]
+    assert len(snaps) == 1                     # one readout, not N
+    assert broker.snapshots.inserts == 1
+    assert not eng.warm["cnn"]
