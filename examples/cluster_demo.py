@@ -1,4 +1,5 @@
-"""Multi-replica host demo: one memory budget, two VM replicas, a broker.
+"""Multi-replica host demo: one memory budget per host, VM replicas, a
+broker per host — and, with ``--hosts N``, a fleet of hosts.
 
 Replica B handles early steady load then idles (kept-alive containers);
 replica A's later burst outgrows the host's free pool, so the broker
@@ -13,15 +14,26 @@ and the grant completes incrementally).
 
 ``--policy`` selects the router: the default ``pinned`` route reproduces
 the classic steal scenario; any ``repro.cluster.router`` policy name
-spreads the shared trace instead.  ``snapshot_affinity`` also enables the
-host snapshot pool: expiring warm containers are copied out and later
-invocations restore from the pool instead of prefilling (the ``warm``/
-``restore`` columns count engine-side start paths; ``squeezed`` counts
-snapshot units the broker dropped — metadata-only — to cover grants).
+spreads the shared trace instead.  ``snapshot_affinity`` and
+``drain_weighted`` also enable the host snapshot pool: expiring warm
+containers are copied out and later invocations restore from the pool
+instead of prefilling (the ``warm``/``restore`` columns count
+engine-side start paths; ``squeezed`` counts snapshot units the broker
+dropped — metadata-only — to cover grants).
+
+``--hosts N`` splits the replicas across N hosts (one broker + budget +
+snapshot pool each, placed via ``FleetScheduler`` spread placement) and
+runs them under ``FleetSim``.  Budgets are then per-host uncontended, so
+steals vanish — what appears instead is cross-host warm-state migration:
+B's expired containers are captured on B's host, and the late tail
+pinned to A pulls those snapshots over (``mig`` column; modeled
+inter-host copy over real payload bytes), so A restores remotely
+(``remote`` column) instead of cold-prefilling.
 
   PYTHONPATH=src python examples/cluster_demo.py
   PYTHONPATH=src python examples/cluster_demo.py \
       --policy snapshot_affinity --modes hotmem
+  PYTHONPATH=src python examples/cluster_demo.py --hosts 2 --modes hotmem
 """
 import argparse
 import os
@@ -35,7 +47,8 @@ jax.config.update("jax_platform_name", "cpu")
 
 import numpy as np
 
-from repro.cluster import ClusterSim, HostMemoryBroker, Router
+from repro.cluster import (ClusterSim, FleetScheduler, FleetSim,
+                           HostMemoryBroker, Router)
 from repro.cluster.router import POLICIES
 from repro.configs.base import get_config, reduced
 from repro.core.arena import ArenaSpec
@@ -43,6 +56,25 @@ from repro.models import model as M
 from repro.serving.engine import ServeEngine
 from repro.serving.request import PROFILES, Request
 from repro.serving.tracegen import assign_profiles, bursty_trace
+
+
+def _reqs(pooled: bool):
+    quiet = bursty_trace(6.0, 0.9, burst_x=1.0, burst_len=0.0, seed=2)
+    burst = [4.0 + t for t in bursty_trace(4.0, 3.0, burst_x=3.0,
+                                           burst_at=(0.0,), burst_len=2.0,
+                                           seed=3)]
+    reqs = [Request(rid=f"b{i}", profile=p, submit_s=t)
+            for i, (t, p) in enumerate(assign_profiles(quiet, PROFILES, 2))]
+    reqs += [Request(rid=f"a{i}", profile=p, submit_s=t)
+             for i, (t, p) in enumerate(assign_profiles(burst, PROFILES, 3))]
+    if pooled:
+        # a late tail, arriving after every warm container has expired
+        # (and been captured): these invocations restore from the pool —
+        # cross-host under --hosts > 1 — instead of prefilling
+        reqs += [Request(rid=f"t{i}", profile=PROFILES[p],
+                         submit_s=12.0 + 0.5 * i)
+                 for i, p in enumerate(("cnn", "bert", "bfs", "html"))]
+    return reqs
 
 
 def main() -> None:
@@ -53,81 +85,94 @@ def main() -> None:
                          "burst on A — the classic steal scenario)")
     ap.add_argument("--modes", default="hotmem,vanilla",
                     help="comma-separated engine modes to run")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="number of hosts; > 1 places replicas across "
+                         "per-host brokers and enables cross-host "
+                         "snapshot migration (FleetSim)")
     args = ap.parse_args()
+    assert args.hosts >= 1
 
     cfg = reduced(get_config("qwen2-7b"))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     spec = ArenaSpec.from_model(cfg, partition_tokens=128, n_partitions=8,
                                 block_tokens=32)
     bpp = spec.blocks_per_partition
-    # snapshot_affinity is the policy that exploits the host snapshot
-    # pool, so only it pays for one (4 partitions' worth, LRU-bounded)
-    pool_units = 4 * bpp if args.policy == "snapshot_affinity" else None
+    # the snapshot pool is paid for by the policies that exploit it —
+    # and always on a fleet, where it is what migration moves
+    pooled = args.policy in ("snapshot_affinity", "drain_weighted") \
+        or args.hosts > 1
+    pool_units = 4 * bpp if pooled else None
+    # one replica per host (min 2, so the steal/pinned scenario exists)
+    rids = [chr(ord("A") + k) for k in range(max(2, args.hosts))]
 
-    print(f"policy={args.policy}")
+    print(f"policy={args.policy} hosts={args.hosts}")
     print(f"{'mode':10s} {'broker':6s} {'completed':>9s} {'steals':>6s} "
           f"{'stall_p99_ms':>12s} {'steal_ms':>9s} {'migratedKiB':>11s} "
-          f"{'lat_p99_s':>9s} {'warm':>5s} {'restore':>7s} {'squeezed':>8s}")
+          f"{'lat_p99_s':>9s} {'warm':>5s} {'restore':>7s} {'remote':>6s} "
+          f"{'mig':>4s} {'squeezed':>8s}")
     for mode in args.modes.split(","):
         for async_mode in (False, True):
-            # host budget: 10 partitions' worth — less than 2 full arenas,
+            # single host: 10 partitions' worth — less than 2 full arenas,
             # so A's burst cannot grow without shrinking B (or squeezing
-            # the snapshot pool first, when one exists)
-            broker = HostMemoryBroker(budget_units=10 * bpp,
-                                      async_reclaim=async_mode,
-                                      snapshot_pool_units=pool_units)
-            engines = {rid: ServeEngine(cfg, params, spec, mode=mode,
-                                        keep_alive=3.0, seed=i,
-                                        broker=broker, replica_id=rid)
-                       for i, rid in enumerate(("A", "B"))}
-            quiet = bursty_trace(6.0, 0.9, burst_x=1.0, burst_len=0.0,
-                                 seed=2)
-            burst = [4.0 + t for t in bursty_trace(
-                4.0, 3.0, burst_x=3.0, burst_at=(0.0,), burst_len=2.0,
-                seed=3)]
-            reqs = [Request(rid=f"b{i}", profile=p, submit_s=t)
-                    for i, (t, p) in enumerate(
-                        assign_profiles(quiet, PROFILES, 2))]
-            reqs += [Request(rid=f"a{i}", profile=p, submit_s=t)
-                     for i, (t, p) in enumerate(
-                         assign_profiles(burst, PROFILES, 3))]
-            if args.policy == "snapshot_affinity":
-                # a late tail, arriving after every warm container has
-                # expired (and been captured): these invocations restore
-                # from the pool instead of prefilling
-                reqs += [Request(rid=f"t{i}", profile=PROFILES[p],
-                                 submit_s=12.0 + 0.5 * i)
-                         for i, p in enumerate(
-                             ("cnn", "bert", "bfs", "html"))]
+            # the snapshot pool first, when one exists).  Fleet: each
+            # host holds a full arena's budget (uncontended — the
+            # cross-host traffic is snapshots, not steals).
+            budget = (10 if args.hosts == 1 else 12) * bpp
+            sched = FleetScheduler()
+            for k in range(args.hosts):
+                sched.add_host(f"h{k}", HostMemoryBroker(
+                    budget_units=budget, async_reclaim=async_mode,
+                    snapshot_pool_units=pool_units))
+            start_units = min(2, spec.n_partitions) * bpp
+            hosts_map = {h: {} for h in sched.brokers}
+            for i, rid in enumerate(rids):
+                host = sched.place(rid, start_units, policy="spread")
+                hosts_map[host][rid] = ServeEngine(
+                    cfg, params, spec, mode=mode, keep_alive=3.0, seed=i,
+                    broker=sched.brokers[host], replica_id=rid)
             if args.policy == "pinned":
                 router = Router(route_fn=lambda r, e:
                                 "B" if r.rid.startswith("b") else "A")
             else:
-                router = Router(args.policy, broker=broker)
-            m = ClusterSim(engines, router, broker).run(reqs,
-                                                        max_virtual_s=2000)
-            rep = m["broker"]["by_mode"].get(mode, {})
-            stalls = broker.request_stalls or [0.0]
+                router = Router(args.policy)
+            if args.hosts == 1:
+                sim = ClusterSim(hosts_map["h0"], router,
+                                 sched.brokers["h0"])
+            else:
+                sim = FleetSim(hosts_map, router, scheduler=sched)
+            m = sim.run(_reqs(pooled), max_virtual_s=2000)
+            sched.check_invariants()
+            reps = [b.report() for b in sched.brokers.values()]
+            by_mode = [r["by_mode"].get(mode, {}) for r in reps]
+            stalls = sum((b.request_stalls for b in
+                          sched.brokers.values()), []) or [0.0]
             print(f"{mode:10s} {'async' if async_mode else 'sync':6s} "
                   f"{m['completed']:9d} "
-                  f"{rep.get('steals', 0):6d} "
+                  f"{sum(r['steals'] for r in reps):6d} "
                   f"{float(np.percentile(stalls, 99)) * 1e3:12.2f} "
-                  f"{rep.get('wall_seconds', 0.0) * 1e3:9.2f} "
-                  f"{rep.get('migrated_bytes', 0) / 1024:11.1f} "
+                  f"{sum(d.get('wall_seconds', 0.0) for d in by_mode) * 1e3:9.2f} "
+                  f"{sum(d.get('migrated_bytes', 0) for d in by_mode) / 1024:11.1f} "
                   f"{(m['latency_p99'] or 0):9.2f} "
                   f"{m['warm_hits']:5d} {m['restore_starts']:7d} "
-                  f"{m['broker']['squeezed_units']:8d}")
+                  f"{m['remote_restore_starts']:6d} "
+                  f"{m['snapshot_migrations']:4d} "
+                  f"{sum(r['squeezed_units'] for r in reps):8d}")
     print("\nThe broker reclaims the idle replica's memory for the loaded"
           "\none; HotMem makes that host-level steal zero-copy, the paged"
           "\nbaseline pays real migration bytes for the same elasticity —"
           "\nand the async reclaim pipeline removes the requester-visible"
           "\nstall entirely (stall_p99 -> 0): victims drain ReclaimOrders"
           "\nbetween their own ticks while the requester keeps decoding."
-          "\nWith --policy snapshot_affinity the host also pools expired"
-          "\nwarm containers' prefix KV: later invocations restore from"
-          "\nthe pool instead of prefilling, and under pressure the"
-          "\nbroker squeezes those snapshot units first (metadata-only)"
-          "\nbefore ordering any VM to shrink.")
+          "\nWith --policy snapshot_affinity or drain_weighted the host"
+          "\nalso pools expired warm containers' prefix KV: later"
+          "\ninvocations restore from the pool instead of prefilling, and"
+          "\nunder pressure the broker squeezes those snapshot units"
+          "\nfirst (metadata-only) before ordering any VM to shrink."
+          "\nWith --hosts N the fleet scheduler places replicas across"
+          "\nper-host budgets and migrates snapshots between hosts (mig)"
+          "\nso a host that never ran a function restores its warm state"
+          "\nremotely (remote) — paying the modeled inter-host copy,"
+          "\nstill far below a cold prefill.")
 
 
 if __name__ == "__main__":

@@ -1,13 +1,27 @@
-"""Multi-replica host layer: broker (hypervisor role), router (FaaS
-front-end role), the host-memory snapshot pool (warm-restart state), and
-the deterministic co-simulation that couples N ``ServeEngine`` replicas
-over one host memory budget."""
+"""Multi-replica host + fleet layer.
+
+Per host: broker (hypervisor role, unit flows owned by a per-host
+``BudgetLedger`` — ONE code path checks ``free + granted + escrow +
+snapshot == budget``), the host-memory snapshot pool (warm-restart
+state), and the router (FaaS front-end role).  Across hosts: the
+``FleetScheduler`` places replicas (pack/spread) and migrates snapshots
+between host pools (modeled inter-host copy — real bytes, configurable
+bandwidth), so a restore on a host that never ran the function lands
+between a local restore and a cold prefill.  ``FleetSim`` couples N
+hosts of ``ServeEngine`` replicas on one deterministic virtual timebase;
+``ClusterSim`` is its single-host specialization.  Router start-path
+tiers (``drain_weighted``): local warm > local snapshot > remote
+snapshot > least-loaded, drain-penalized by how many blocks a replica
+owes to open reclaim orders."""
+from repro.cluster.fleet import FleetScheduler, MigrationRecord
 from repro.cluster.host import (AlwaysGrantBroker, Grant, HostMemoryBroker,
                                 MemoryBroker, ReclaimOrder, StealRecord)
+from repro.cluster.ledger import BudgetLedger
 from repro.cluster.router import Router
-from repro.cluster.sim import ClusterSim
+from repro.cluster.sim import ClusterSim, FleetSim
 from repro.cluster.snapshots import Snapshot, SnapshotPool, SqueezeRecord
 
-__all__ = ["AlwaysGrantBroker", "Grant", "HostMemoryBroker", "MemoryBroker",
-           "ReclaimOrder", "StealRecord", "Router", "ClusterSim",
+__all__ = ["AlwaysGrantBroker", "BudgetLedger", "ClusterSim", "FleetSim",
+           "FleetScheduler", "Grant", "HostMemoryBroker", "MemoryBroker",
+           "MigrationRecord", "ReclaimOrder", "StealRecord", "Router",
            "Snapshot", "SnapshotPool", "SqueezeRecord"]

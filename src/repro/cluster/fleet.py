@@ -1,0 +1,215 @@
+"""Fleet layer: N hosts, one scheduler — placement + warm-state migration.
+
+One ``HostMemoryBroker`` arbitrates ONE host's budget; the fleet
+scheduler is the level above (the ROADMAP's multi-host item): it owns a
+broker per host, places replicas onto hosts, and moves warm-restart
+state *between* hosts, TrEnv-X-style — a host that never ran a function
+can still restore its prefix KV from a peer's snapshot pool instead of
+paying a cold prefill.
+
+Placement (``place``) is capacity-driven and deterministic:
+
+  * ``spread`` — put the replica on the host with the most reclaimable
+    capacity (free pool + droppable snapshot charge); classic load
+    spreading, maximizes per-host slack.
+  * ``pack``   — best-fit: the fitting host with the LEAST capacity, so
+    big contiguous budgets stay available for later replicas.
+
+Ties break on host id; a replica that fits nowhere is a placement error
+(the caller sees it immediately, not as a later register failure).
+
+Cross-host snapshot migration (``ensure_local`` / ``migrate_snapshot``):
+when the destination host lacks a restorable snapshot for a function but
+a peer holds one, the scheduler debits the peer's pool (its ledger
+credits the units back to its free pool), charges a modeled inter-host
+copy — REAL payload bytes over a configurable ``bandwidth_bytes_per_s``
+plus a fixed ``link_latency_s`` — and credits the destination pool.  The
+copy wall rides the migrated ``Snapshot`` (``copy_seconds``) and is paid
+by the first restore that uses it (``ServeEngine._start_restore`` tags
+that event ``source="remote"``), so a remote restore lands strictly
+between a local restore and a cold prefill.  Unit conservation stays
+per-host throughout: a migration is ``snapshot_drop`` on the source
+ledger and ``snapshot_put`` on the destination ledger — units never
+teleport between budgets, and ``check_invariants`` proves every host's
+``free + granted + escrow + snapshot == budget`` after every fleet
+event.
+
+A migration is refused (returns ``None``, nothing mutated) when no peer
+holds a restorable copy or the destination pool has no room — the
+destination then simply cold-starts, exactly as before the fleet
+existed.
+
+``FleetSim`` (``repro.cluster.sim``) drives N hosts of engines on one
+deterministic virtual timebase and calls ``ensure_local`` as arrivals
+are routed; ``Router``'s ``drain_weighted`` policy consumes the fleet
+view (``host_of`` / ``snapshot_host`` / ``open_order_units``) for its
+placement tiers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from repro.cluster.host import HostMemoryBroker
+
+PLACEMENTS = ("spread", "pack")
+
+
+@dataclasses.dataclass
+class MigrationRecord:
+    """One cross-host snapshot migration: ``key``'s warm state moved from
+    ``src`` to ``dst``, paying a modeled ``copy_seconds`` transfer for
+    ``nbytes`` real payload bytes."""
+    key: str
+    src: str
+    dst: str
+    units: int
+    nbytes: int
+    copy_seconds: float
+    at: float                    # fleet-clock timestamp
+
+
+class FleetScheduler:
+    """Owns one ``HostMemoryBroker`` per host: places replicas, serves
+    the fleet-wide snapshot view, and migrates warm state across hosts."""
+
+    def __init__(self, *, bandwidth_bytes_per_s: float = float(1 << 30),
+                 link_latency_s: float = 5e-4,
+                 clock: Optional[Callable[[], float]] = None):
+        assert bandwidth_bytes_per_s > 0 and link_latency_s >= 0
+        self.bandwidth_bytes_per_s = bandwidth_bytes_per_s
+        self.link_latency_s = link_latency_s
+        self._clock = clock if clock is not None else (lambda: 0.0)
+        self.brokers: dict[str, HostMemoryBroker] = {}
+        self.placements: dict[str, str] = {}     # replica -> host
+        self.migrations: list[MigrationRecord] = []
+        self.migration_denied = 0    # no source / no room at destination
+
+    def set_clock(self, clock: Callable[[], float]) -> None:
+        """Inject the fleet's deterministic timebase (``FleetSim`` passes
+        the sum of every host's virtual clock)."""
+        self._clock = clock
+
+    # ------------------------------------------------------------ topology
+    def add_host(self, host_id: str, broker: HostMemoryBroker) -> None:
+        assert host_id not in self.brokers, host_id
+        self.brokers[host_id] = broker
+
+    def host_of(self, replica_id: str) -> Optional[str]:
+        return self.placements.get(replica_id)
+
+    def broker_of(self, replica_id: str) -> Optional[HostMemoryBroker]:
+        host = self.placements.get(replica_id)
+        return self.brokers.get(host) if host is not None else None
+
+    # ----------------------------------------------------------- placement
+    def capacity(self, host_id: str) -> int:
+        """Units a new replica could claim without disturbing any VM:
+        the free pool plus the droppable snapshot charge (``register``
+        squeezes the pool for a booting replica)."""
+        b = self.brokers[host_id]
+        return b.free_units + b.snapshot_units()
+
+    def place(self, replica_id: str, units: int, *,
+              policy: str = "spread") -> str:
+        """Pick the host for a new ``units``-block replica and record the
+        placement.  The caller then boots the engine against that host's
+        broker (which registers it)."""
+        assert policy in PLACEMENTS, policy
+        assert replica_id not in self.placements, replica_id
+        fits = [h for h in sorted(self.brokers)
+                if self.capacity(h) >= units]
+        assert fits, \
+            f"no host can fit {units} units for {replica_id}: " \
+            f"capacities {({h: self.capacity(h) for h in self.brokers})}"
+        if policy == "spread":
+            host = min(fits, key=lambda h: (-self.capacity(h), h))
+        else:                                    # pack: best fit
+            host = min(fits, key=lambda h: (self.capacity(h), h))
+        self.placements[replica_id] = host
+        return host
+
+    # -------------------------------------------------- fleet-wide signals
+    def open_order_units(self, replica_id: str) -> int:
+        """Blocks ``replica_id`` owes its host's open reclaim orders (the
+        router's drain-awareness signal, lifted fleet-wide)."""
+        b = self.broker_of(replica_id)
+        return b.open_order_units(replica_id) if b is not None else 0
+
+    def snapshot_host(self, key: str, *,
+                      exclude: Optional[str] = None) -> Optional[str]:
+        """First host (by id — deterministic) whose pool holds a
+        RESTORABLE snapshot for ``key``; ``exclude`` skips the would-be
+        destination when scouting migration sources."""
+        for h in sorted(self.brokers):
+            if h != exclude and self.brokers[h].snapshot_restorable(key):
+                return h
+        return None
+
+    # ----------------------------------------------------------- migration
+    def ensure_local(self, key: str, dst_host: str
+                     ) -> Optional[MigrationRecord]:
+        """Make ``key`` restorable on ``dst_host`` if any peer can supply
+        it: a no-op when the destination already holds a restorable copy,
+        a cross-host migration otherwise.  Returns the migration record,
+        or ``None`` when nothing moved."""
+        dst = self.brokers[dst_host]
+        if dst.snapshot_restorable(key):
+            return None
+        return self.migrate_snapshot(key, dst_host)
+
+    def migrate_snapshot(self, key: str, dst_host: str
+                         ) -> Optional[MigrationRecord]:
+        """Move ``key``'s snapshot from whichever peer holds it to
+        ``dst_host``: debit the source pool, model the inter-host copy
+        (real bytes / bandwidth + link latency), credit the destination
+        pool.  Per-host conservation holds on both ledgers; the copy wall
+        is owed by the migrated entry until its first restore claims it."""
+        src_host = self.snapshot_host(key, exclude=dst_host)
+        if src_host is None:
+            self.migration_denied += 1
+            return None
+        src, dst = self.brokers[src_host], self.brokers[dst_host]
+        snap = src.snapshots.peek(key)
+        if not dst.snapshot_room(key, snap.units):
+            self.migration_denied += 1           # destination under
+            return None                          # pressure: cold-start
+        units, nbytes = snap.units, snap.nbytes
+        payload, tokens = snap.payload, snap.tokens
+        # any transfer wall the source itself still owed compounds: a
+        # twice-migrated snapshot pays both hops at its first restore
+        copy_s = snap.copy_seconds + self.link_latency_s \
+            + nbytes / self.bandwidth_bytes_per_s
+        src.snapshot_drop(key)                   # debit: src ledger credits
+        ok = dst.snapshot_put(key, units=units, payload=payload,
+                              tokens=tokens, nbytes=nbytes,
+                              replica_id=snap.replica_id,
+                              origin_host=src_host, copy_seconds=copy_s)
+        assert ok, "room check promised space at the destination"
+        rec = MigrationRecord(key=key, src=src_host, dst=dst_host,
+                              units=units, nbytes=nbytes,
+                              copy_seconds=copy_s, at=self._clock())
+        self.migrations.append(rec)
+        return rec
+
+    # -------------------------------------------------------------- report
+    def report(self) -> dict[str, Any]:
+        return {
+            "hosts": {h: b.report() for h, b in self.brokers.items()},
+            "placements": dict(self.placements),
+            "migrations": len(self.migrations),
+            "migrated_snapshot_bytes": sum(r.nbytes
+                                           for r in self.migrations),
+            "migration_copy_seconds": sum(r.copy_seconds
+                                          for r in self.migrations),
+            "migration_denied": self.migration_denied,
+        }
+
+    # ---------------------------------------------------------- invariants
+    def check_invariants(self) -> None:
+        """Per-host conservation, fleet-wide: every host's ledger law
+        (and order/grant/pool cross-checks) after any fleet event."""
+        for b in self.brokers.values():
+            b.check_invariants()
+        for rid, host in self.placements.items():
+            assert host in self.brokers, (rid, host)

@@ -58,7 +58,12 @@ budget_units`` where ``escrow`` is the pending-delivery pool (units victims
 already drained into open grants that their requesters have not claimed
 yet) and ``snapshot_units`` is the host snapshot pool's charge (persisted
 warm-restart state, see ``repro.cluster.snapshots``) — the host never
-double-grants a unit and never leaks one, even mid-order.
+double-grants a unit and never leaks one, even mid-order.  All four
+accounts live in a per-host ``BudgetLedger`` (``repro.cluster.ledger``):
+every unit flow is a ledger verb and the invariant is checked by that one
+code path, so the fleet layer (``repro.cluster.fleet``) can run N hosts
+and assert per-host conservation after every fleet event — including
+cross-host snapshot migrations — without re-deriving the law anywhere.
 
 Snapshot-squeeze-first reclaim rule: when a plug request outruns the free
 pool, the broker first drops LRU snapshots (``_squeeze_snapshots`` —
@@ -87,6 +92,7 @@ import time
 from typing import Any, Callable, Optional
 
 from repro.core.arena import ReclaimEvent
+from repro.cluster.ledger import BudgetLedger
 from repro.cluster.snapshots import Snapshot, SnapshotPool, SqueezeRecord
 
 # victim-side reclaim callback: (k_units) -> (units_reclaimed, event|None)
@@ -197,7 +203,8 @@ class MemoryBroker:
 
     def snapshot_put(self, key: str, *, units: int, payload: Any = None,
                      tokens: int = 0, nbytes: int = 0,
-                     replica_id: str = "") -> bool:
+                     replica_id: str = "", origin_host: str = "",
+                     copy_seconds: float = 0.0) -> bool:
         return False
 
     def snapshot_lookup(self, key: str) -> Optional[Snapshot]:
@@ -234,9 +241,9 @@ class HostMemoryBroker(MemoryBroker):
     def __init__(self, budget_units: int, *, async_reclaim: bool = False,
                  clock: Optional[Callable[[], float]] = None,
                  snapshot_pool_units: Optional[int] = None):
-        assert budget_units > 0
-        self.budget_units = budget_units
-        self.free_units = budget_units
+        # all unit accounts (free / granted / escrow / snapshot charge)
+        # live in the ledger; the broker only orchestrates flows
+        self.ledger = BudgetLedger(budget_units)
         self.async_reclaim = async_reclaim
         self._clock = clock if clock is not None else time.perf_counter
         # host snapshot pool (None = disabled): warm-restart state charged
@@ -247,7 +254,6 @@ class HostMemoryBroker(MemoryBroker):
             self.snapshots = SnapshotPool(max_units=snapshot_pool_units)
         self.squeeze_log: list[SqueezeRecord] = []
         self._inline_reclaim = False     # sync steal in flight: pool fenced
-        self.granted: dict[str, int] = {}
         self._reclaim: dict[str, ReclaimFn] = {}
         self._load: dict[str, Callable[[], int]] = {}
         self._mode: dict[str, Optional[str]] = {}
@@ -262,6 +268,20 @@ class HostMemoryBroker(MemoryBroker):
         self.denied_units = 0        # requested-but-ungranted (pressure)
         self.request_stalls: list[float] = []   # per pressured request: the
         #                                         requester-visible stall
+
+    # ledger views: the broker's public unit counters ARE the ledger's
+    # (one owner for the conservation law; these stay readable as before)
+    @property
+    def budget_units(self) -> int:
+        return self.ledger.budget_units
+
+    @property
+    def free_units(self) -> int:
+        return self.ledger.free_units
+
+    @property
+    def granted(self) -> dict[str, int]:
+        return self.ledger.granted
 
     def set_clock(self, clock: Callable[[], float]) -> None:
         """Inject a (virtual) clock; ``ClusterSim`` passes its deterministic
@@ -285,8 +305,7 @@ class HostMemoryBroker(MemoryBroker):
         assert initial_units <= self.free_units, \
             f"host budget exhausted registering {replica_id}: " \
             f"need {initial_units}, free {self.free_units}"
-        self.free_units -= initial_units
-        self.granted[replica_id] = initial_units
+        self.ledger.carve(replica_id, initial_units)
         if reclaim is not None:
             self._reclaim[replica_id] = reclaim
         if load is not None:
@@ -316,19 +335,14 @@ class HostMemoryBroker(MemoryBroker):
         if want <= 0:
             return g
         self.grant_calls += 1
-        take = min(want, self.free_units)
-        self.free_units -= take
-        self.granted[replica_id] += take
-        g.granted = take
-        deficit = want - take
+        g.granted = self.ledger.take_free(replica_id, want)
+        deficit = want - g.granted
         if deficit <= 0:
             return g
         # snapshot-squeeze-first: cached warm-restart state is the host's
         # bounded-lifetime region — drop it before disturbing any replica
         if self._squeeze_snapshots(deficit, requester=replica_id):
-            take = min(deficit, self.free_units)
-            self.free_units -= take
-            self.granted[replica_id] += take
+            take = self.ledger.take_free(replica_id, deficit)
             g.granted += take
             deficit -= take
         if deficit <= 0:
@@ -346,9 +360,7 @@ class HostMemoryBroker(MemoryBroker):
             stall = self._reclaim_from_idlest(replica_id, deficit)
             g.stall_seconds = stall
             self.request_stalls.append(stall)
-            take2 = min(deficit, self.free_units)
-            self.free_units -= take2
-            self.granted[replica_id] += take2
+            take2 = self.ledger.take_free(replica_id, deficit)
             g.granted += take2
             self.denied_units += deficit - take2
         return g
@@ -371,8 +383,7 @@ class HostMemoryBroker(MemoryBroker):
                 self._apply_fill(o, k, wall=0.0, ev=None, natural=True)
                 units -= k
         if units > 0:
-            self.granted[replica_id] -= units
-            self.free_units += units
+            self.ledger.release(replica_id, units)
 
     # ----------------------------------------------------- snapshot pool
     def snapshot_room(self, key: str, units: int) -> bool:
@@ -391,16 +402,21 @@ class HostMemoryBroker(MemoryBroker):
 
     def snapshot_put(self, key: str, *, units: int, payload: Any = None,
                      tokens: int = 0, nbytes: int = 0,
-                     replica_id: str = "") -> bool:
+                     replica_id: str = "", origin_host: str = "",
+                     copy_seconds: float = 0.0) -> bool:
         """Persist a copied-out partition into the pool, charging ``units``
         against the free pool.  A same-key predecessor is replaced; LRU
         entries are evicted for cap/space; returns False (nothing changed)
-        when the snapshot cannot fit."""
+        when the snapshot cannot fit.  ``origin_host``/``copy_seconds``
+        mark a cross-host migration (``repro.cluster.fleet``): the modeled
+        inter-host copy wall is paid by the first restore that uses the
+        entry, so a remote restore lands between a local restore and a
+        cold prefill."""
         if not self.snapshot_room(key, units):
             return False
         pool = self.snapshots
         replacing = key in pool
-        self.free_units += pool.drop(key)        # same-key charge returns
+        self.ledger.snapshot_credit(pool.drop(key))  # same-key charge back
         if replacing:
             pool.replaced += 1
         while units > self.free_units or not (
@@ -408,13 +424,14 @@ class HostMemoryBroker(MemoryBroker):
                 or pool.units + units <= pool.max_units):
             evicted = pool.evict_lru()
             assert evicted is not None, "room check promised space"
-            self.free_units += evicted.units
+            self.ledger.snapshot_credit(evicted.units)
         now = self._clock()
-        self.free_units -= units
+        self.ledger.snapshot_charge(units)
         pool.insert(Snapshot(key=key, units=units, tokens=tokens,
                              nbytes=nbytes, payload=payload,
                              replica_id=replica_id, created_at=now,
-                             last_used=now))
+                             last_used=now, origin_host=origin_host,
+                             copy_seconds=copy_seconds))
         return True
 
     def snapshot_lookup(self, key: str) -> Optional[Snapshot]:
@@ -449,7 +466,7 @@ class HostMemoryBroker(MemoryBroker):
         if self.snapshots is None:
             return 0
         freed = self.snapshots.drop(key)
-        self.free_units += freed
+        self.ledger.snapshot_credit(freed)
         return freed
 
     def snapshot_units(self) -> int:
@@ -473,7 +490,7 @@ class HostMemoryBroker(MemoryBroker):
             self.squeeze_log.append(SqueezeRecord(
                 requester=requester, key=snap.key, units=snap.units,
                 nbytes=snap.nbytes, at=now))
-        self.free_units += freed
+        self.ledger.snapshot_credit(freed)
         return freed
 
     # --------------------------------------------------- async order plane
@@ -524,7 +541,7 @@ class HostMemoryBroker(MemoryBroker):
     def _apply_fill(self, o: ReclaimOrder, k: int, *, wall: float,
                     ev: Optional[ReclaimEvent], natural: bool) -> None:
         g = self._order_grant[o.order_id]
-        self.granted[o.victim] -= k
+        self.ledger.escrow_fill(o.victim, k)
         o.filled += k
         g.pending -= k
         g.available += k
@@ -586,7 +603,7 @@ class HostMemoryBroker(MemoryBroker):
             return 0
         grant.available = 0
         grant.claimed += k
-        self.granted[grant.replica_id] += k
+        self.ledger.escrow_claim(grant.replica_id, k)
         self._prune_grant(grant)
         return k
 
@@ -601,7 +618,7 @@ class HostMemoryBroker(MemoryBroker):
         return sum(o.remaining for o in self.orders.values())
 
     def escrow_units(self) -> int:
-        return sum(g.available for g in self.grants)
+        return self.ledger.escrow_units
 
     def pressure(self) -> float:
         """Outstanding pending units / budget: how far the host is from
@@ -637,8 +654,7 @@ class HostMemoryBroker(MemoryBroker):
                 if got <= 0:
                     continue
                 assert got <= self.granted[v]
-                self.granted[v] -= got
-                self.free_units += got
+                self.ledger.release(v, got)
                 deficit -= got
                 stall += wall
                 self.steal_log.append(StealRecord(
@@ -690,17 +706,17 @@ class HostMemoryBroker(MemoryBroker):
 
     # ---------------------------------------------------------- invariants
     def check_invariants(self) -> None:
-        assert self.free_units >= 0
-        assert all(g >= 0 for g in self.granted.values())
-        escrow = self.escrow_units()
-        assert escrow >= 0
-        snapshot_units = self.snapshot_units()
-        assert snapshot_units >= 0
+        # conservation (free + granted + escrow + snapshot == budget) is
+        # the ledger's single check; the broker asserts its order/grant/
+        # pool structures agree with the ledger's accounts
+        self.ledger.check()
+        assert self.ledger.escrow_units \
+            == sum(g.available for g in self.grants), \
+            "escrow not backed by open grants"
+        assert self.ledger.snapshot_units == self.snapshot_units(), \
+            "pool charge diverged from the ledger"
         if self.snapshots is not None:
             self.snapshots.check_invariants()
-        assert self.free_units + sum(self.granted.values()) + escrow \
-            + snapshot_units == self.budget_units, \
-            "host units leaked or double-granted"
         for o in self.orders.values():
             assert 0 <= o.filled + o.canceled <= o.units, o
             if o.open:

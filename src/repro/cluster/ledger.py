@@ -1,0 +1,113 @@
+"""Per-host budget ledger: the conservation law with a single owner.
+
+Every host-level memory flow — boot-time plugs, grant fills, unplug
+releases, escrowed reclaim-order proceeds, snapshot-pool charges — moves
+units between exactly four ledger accounts:
+
+    free        the host pool (unowned, grantable now)
+    granted     per-replica holdings (the VMs' plugged memory)
+    escrow      reclaim-order proceeds drained by victims but not yet
+                claimed by their requesters (in flight between VMs)
+    snapshot    the host snapshot pool's charge (persisted warm-restart
+                state, droppable under pressure)
+
+and the invariant the whole test suite anchors on is checked in ONE
+place, ``check``::
+
+    free + sum(granted) + escrow + snapshot == budget
+
+``HostMemoryBroker`` used to own these counters inline; extracting them
+lets the fleet layer (``repro.cluster.fleet``) run N hosts with N
+independent ledgers and assert per-host conservation after every fleet
+event — including cross-host snapshot migrations, which are a
+``snapshot_credit`` on the source ledger and a ``snapshot_charge`` on
+the destination one, never a unit teleporting between budgets.
+
+Each verb asserts its own preconditions (no negative balances, no
+overdrafts), so an illegal flow fails loudly at the flow, not later at a
+``check`` that can no longer say who leaked.
+"""
+from __future__ import annotations
+
+
+class BudgetLedger:
+    """Unit-conservation ledger for one host's memory budget."""
+
+    def __init__(self, budget_units: int):
+        assert budget_units > 0
+        self.budget_units = budget_units
+        self.free_units = budget_units
+        self.granted: dict[str, int] = {}
+        self.escrow_units = 0
+        self.snapshot_units = 0
+
+    # ------------------------------------------------------------- replicas
+    def carve(self, replica_id: str, units: int) -> None:
+        """Boot-time plug: carve a new replica's initial holding out of
+        the free pool."""
+        assert replica_id not in self.granted, replica_id
+        assert 0 <= units <= self.free_units, \
+            f"budget exhausted carving {units} for {replica_id}: " \
+            f"free {self.free_units}"
+        self.free_units -= units
+        self.granted[replica_id] = units
+
+    def take_free(self, replica_id: str, want: int) -> int:
+        """Grant fill: move up to ``want`` units free -> granted.
+        Clipped to the pool, never overdrafts; returns units moved."""
+        assert replica_id in self.granted, replica_id
+        take = min(max(want, 0), self.free_units)
+        self.free_units -= take
+        self.granted[replica_id] += take
+        return take
+
+    def release(self, replica_id: str, units: int) -> None:
+        """Unplug completion: granted -> free."""
+        assert 0 < units <= self.granted.get(replica_id, 0), \
+            f"{replica_id} returning {units} units it was never granted"
+        self.granted[replica_id] -= units
+        self.free_units += units
+
+    # --------------------------------------------------------------- escrow
+    def escrow_fill(self, victim: str, units: int) -> None:
+        """Order drain: a victim's surrendered units enter escrow (owned
+        by an open grant, awaiting the requester's claim)."""
+        assert 0 < units <= self.granted.get(victim, 0), (victim, units)
+        self.granted[victim] -= units
+        self.escrow_units += units
+
+    def escrow_claim(self, replica_id: str, units: int) -> None:
+        """Grant completion: escrow -> the requester's holding."""
+        assert 0 < units <= self.escrow_units, (units, self.escrow_units)
+        assert replica_id in self.granted, replica_id
+        self.escrow_units -= units
+        self.granted[replica_id] += units
+
+    # ------------------------------------------------------------- snapshot
+    def snapshot_charge(self, units: int) -> None:
+        """Pool insert: free -> snapshot charge."""
+        assert 0 < units <= self.free_units, (units, self.free_units)
+        self.free_units -= units
+        self.snapshot_units += units
+
+    def snapshot_credit(self, units: int) -> None:
+        """Pool drop/evict/squeeze: snapshot charge -> free.  A zero
+        credit is a no-op (callers pass through ``pool.drop`` returns)."""
+        if units == 0:
+            return
+        assert 0 < units <= self.snapshot_units, \
+            (units, self.snapshot_units)
+        self.snapshot_units -= units
+        self.free_units += units
+
+    # ------------------------------------------------------------ invariant
+    def check(self) -> None:
+        """THE conservation law — the one code path per host that proves
+        no unit was leaked or double-granted."""
+        assert self.free_units >= 0
+        assert self.escrow_units >= 0
+        assert self.snapshot_units >= 0
+        assert all(g >= 0 for g in self.granted.values())
+        assert self.free_units + sum(self.granted.values()) \
+            + self.escrow_units + self.snapshot_units \
+            == self.budget_units, "host units leaked or double-granted"

@@ -1,4 +1,4 @@
-"""Multi-replica co-simulation: N ``ServeEngine`` replicas, one host.
+"""Fleet co-simulation: N ``ServeEngine`` replicas across M hosts.
 
 Each engine keeps its own virtual clock (advanced by measured wall time of
 its device ops).  The sim interleaves them deterministically: always tick
@@ -7,21 +7,32 @@ only once every busy replica has caught up to its submit time — so routing
 decisions see the cluster state "at" the arrival instant, and a fixed
 (trace, seed) pair replays identically.
 
-The broker couples the replicas.  Synchronous mode: a loaded replica's
-plug request shrinks an idle one inline (``_reclaim_from_idlest`` -> the
-victim's ``reclaim_for_broker``), charging BOTH clocks with the reclaim
-stall (the victim does the work, the requester serializes behind it).
-Async mode: the request returns a ``Grant`` immediately and the sim's
-tick interleaving is what pipelines the reclaim — order issuance (at the
-requester's plug), partial fulfillment (the victim drains a chunk per
-tick, between its decodes), and grant completion (the requester claims
-escrowed fills at its own tick) all advance on the same deterministic
-virtual timebase, so the requester's decode overlaps the victim's drain.
+``FleetSim`` is the general form: replicas are grouped into hosts, each
+host owns a ``HostMemoryBroker`` (its budget ledger couples only the
+replicas placed on it), and a ``FleetScheduler`` moves warm snapshot
+state BETWEEN hosts as arrivals are routed (``_localize_snapshot``: when
+the chosen replica's host lacks a restorable snapshot that a peer holds,
+the scheduler migrates it — debiting the peer's pool, charging the
+modeled inter-host copy, crediting the local pool — so the admission
+restores remotely-captured state instead of cold-prefilling).
 
-The sim hands the broker its virtual clock (total virtual busy time across
-replicas — monotonic, advanced only by ticks) so steal records and order
-timestamps are deterministic for a fixed (trace, seed), not wall-clock
-noise.
+Timebase: each host's broker is stamped with that host's virtual clock
+(the sum of its replicas' ``now`` — monotonic, advanced only by ticks),
+and the scheduler's fleet clock is the sum over every host.  With one
+host this is exactly the old single-host timebase, so ``ClusterSim`` —
+now the single-host specialization — replays its traces bit-identically.
+
+The broker couples a host's replicas.  Synchronous mode: a loaded
+replica's plug request shrinks an idle one inline
+(``_reclaim_from_idlest`` -> the victim's ``reclaim_for_broker``),
+charging BOTH clocks with the reclaim stall (the victim does the work,
+the requester serializes behind it).  Async mode: the request returns a
+``Grant`` immediately and the sim's tick interleaving is what pipelines
+the reclaim — order issuance (at the requester's plug), partial
+fulfillment (the victim drains a chunk per tick, between its decodes),
+and grant completion (the requester claims escrowed fills at its own
+tick) all advance on the same deterministic virtual timebase, so the
+requester's decode overlaps the victim's drain.
 """
 from __future__ import annotations
 
@@ -34,22 +45,67 @@ from repro.cluster.router import Router
 from repro.serving.request import State
 
 
-class ClusterSim:
-    def __init__(self, engines: dict[str, Any], router: Optional[Router]
-                 = None, broker=None):
-        assert engines
-        self.engines = dict(engines)
+class FleetSim:
+    """N hosts of engines on one deterministic virtual timebase.
+
+    ``hosts`` maps host id -> {replica id -> engine}; replica ids are
+    fleet-unique.  ``brokers`` (host id -> broker) defaults to the
+    scheduler's when one is given; each broker's clock is re-stamped with
+    its host's virtual time so steal/order/squeeze records replay
+    deterministically.  ``scheduler`` (a ``FleetScheduler``) enables
+    cross-host snapshot migration at route time."""
+
+    def __init__(self, hosts: dict[str, dict[str, Any]],
+                 router: Optional[Router] = None,
+                 brokers: Optional[dict[str, Any]] = None,
+                 scheduler=None):
+        assert hosts and all(hosts.values())
+        self.hosts = {h: dict(es) for h, es in hosts.items()}
+        self.engines: dict[str, Any] = {}
+        self._host_of: dict[str, str] = {}
+        for h, es in self.hosts.items():
+            for rid, e in es.items():
+                assert rid not in self.engines, \
+                    f"replica id {rid} appears on two hosts"
+                self.engines[rid] = e
+                self._host_of[rid] = h
+        self.scheduler = scheduler
+        if brokers is None:
+            # a scheduler may own hosts this sim does not drive
+            brokers = {h: b for h, b in scheduler.brokers.items()
+                       if h in self.hosts} if scheduler is not None else {}
+        else:
+            assert all(h in self.hosts for h in brokers), \
+                f"brokers keyed off-host: " \
+                f"{sorted(set(brokers) - set(hosts))}"
+        self._brokers = {h: b for h, b in brokers.items() if b is not None}
+        # single-host back-compat: THE broker (metrics expose its report)
+        self.broker = next(iter(self._brokers.values())) \
+            if len(self._brokers) == 1 else None
+        for h, b in self._brokers.items():
+            if hasattr(b, "set_clock"):
+                b.set_clock(lambda h=h: self.host_now(h))
+        if scheduler is not None:
+            scheduler.set_clock(self.virtual_now)
+            for rid, h in self._host_of.items():
+                scheduler.placements.setdefault(rid, h)
         self.router = router or Router()
-        self.broker = broker          # kept for metrics; engines hold a ref
-        if broker is not None and hasattr(broker, "set_clock"):
-            broker.set_clock(self.virtual_now)
-        if self.router.broker is None:
-            self.router.broker = broker
+        if self.router.broker is None and self.broker is not None:
+            self.router.broker = self.broker
+        if self.router.fleet is None and scheduler is not None:
+            self.router.fleet = scheduler
+
+    # ------------------------------------------------------------- clocks
+    def host_now(self, host_id: str) -> float:
+        """One host's deterministic timebase: total virtual busy time of
+        its replicas.  Each tick advances exactly one replica's clock, so
+        deltas of this sum measure the victim-side work between any two
+        of that host's broker events."""
+        return sum(e.now for e in self.hosts[host_id].values())
 
     def virtual_now(self) -> float:
-        """Deterministic host timebase: total virtual busy time.  Each
-        tick advances exactly one replica's clock, so deltas of this sum
-        measure the victim-side work between any two broker events."""
+        """The fleet clock: total virtual busy time across every host
+        (stamps ``MigrationRecord``s and single-host broker events)."""
         return sum(e.now for e in self.engines.values())
 
     # ------------------------------------------------------------------ run
@@ -82,6 +138,7 @@ class ClusterSim:
                 req = arrivals.popleft()
                 backlog = {r: len(todos[r]) for r in self.engines}
                 target = self.router.route(req, self.engines, backlog)
+                self._localize_snapshot(req, target)
                 todos[target].append(req)
                 continue
             if not busy_ids:
@@ -90,6 +147,20 @@ class ClusterSim:
             self.engines[rid]._tick(todos[rid])
             ticks += 1
         return self.metrics()
+
+    def _localize_snapshot(self, req, target: str) -> None:
+        """Fleet migration hook, at route time: if the chosen replica's
+        host lacks a restorable snapshot for the function but a peer
+        holds one, migrate it now so the admission restores instead of
+        cold-prefilling.  Skipped when the replica holds a warm row (an
+        adopt beats any restore — the copy would be wasted) and on
+        single-host sims (nowhere to migrate from)."""
+        if self.scheduler is None or len(self._brokers) < 2:
+            return
+        if self.engines[target].warm.get(req.profile.name):
+            return
+        self.scheduler.ensure_local(req.profile.name,
+                                    self._host_of[target])
 
     # -------------------------------------------------------------- metrics
     def metrics(self) -> dict[str, Any]:
@@ -102,7 +173,10 @@ class ClusterSim:
             "completed": sum(r.state is State.DONE for r in done),
             "killed": sum(r.state is State.KILLED for r in done),
             "latency_p50": float(np.percentile(lat, 50)) if lat else None,
-            "latency_p99": float(np.percentile(lat, 99)) if lat else None,
+            # a 1-sample "percentile" is just that sample — meaningless as
+            # a tail statistic, so report None until there are >= 2
+            "latency_p99": float(np.percentile(lat, 99))
+            if len(lat) >= 2 else None,
             "reclaimed_bytes": sum(m["reclaimed_bytes"]
                                    for m in per.values()),
             "migrated_bytes": sum(m["migrated_bytes"] for m in per.values()),
@@ -114,11 +188,31 @@ class ClusterSim:
             "warm_hits": sum(getattr(e, "warm_starts", 0) for e in engines),
             "restore_starts": sum(getattr(e, "restore_starts", 0)
                                   for e in engines),
+            "remote_restore_starts": sum(
+                getattr(e, "remote_restore_starts", 0) for e in engines),
             "cold_starts": sum(getattr(e, "cold_starts", 0)
                                for e in engines),
             "warm_routes": self.router.warm_routes,
             "snapshot_routes": self.router.snapshot_routes,
+            "remote_routes": self.router.remote_routes,
+            "snapshot_migrations": len(self.scheduler.migrations)
+            if self.scheduler is not None else 0,
         }
         if self.broker is not None:
             out["broker"] = self.broker.report()
+        if self.scheduler is not None:
+            out["fleet"] = self.scheduler.report()
         return out
+
+
+class ClusterSim(FleetSim):
+    """Single-host specialization (the pre-fleet interface): N replicas,
+    one broker, no cross-host migration.  ``FleetSim`` with one host
+    replays these traces bit-identically — the regression tests pin that
+    seam."""
+
+    def __init__(self, engines: dict[str, Any], router: Optional[Router]
+                 = None, broker=None):
+        assert engines
+        super().__init__({"host0": dict(engines)}, router,
+                         brokers={"host0": broker})

@@ -44,6 +44,17 @@ class Snapshot:
     created_at: float = 0.0
     last_used: float = 0.0       # LRU recency stamp
     restores: int = 0            # times copied back into a partition
+    # cross-host migration (repro.cluster.fleet): the host this entry was
+    # copied from, and the modeled inter-host transfer wall still owed.
+    # The first restore pays it (claim_copy) and the entry becomes local.
+    origin_host: str = ""
+    copy_seconds: float = 0.0
+
+    def claim_copy(self) -> float:
+        """Pay the pending inter-host copy: returns the owed wall once
+        (0.0 for local entries and on every later restore)."""
+        owed, self.copy_seconds = self.copy_seconds, 0.0
+        return owed
 
 
 @dataclasses.dataclass

@@ -131,6 +131,8 @@ class ServeEngine:
         self.cold_starts = 0
         self.warm_starts = 0
         self.restore_starts = 0
+        self.remote_restore_starts = 0   # restores that paid an inter-host
+        #                                  copy (fleet snapshot migration)
         self._prof_tokens: dict[str, int] = {}   # profile -> prompt tokens
         self._row_req: dict[int, Request] = {}
         self._decode_jit: dict[int, Any] = {}       # rows -> compiled step
@@ -325,19 +327,32 @@ class ServeEngine:
         host pool when its last warm container was recycled; copy it back
         into the freshly admitted partition.  No prefill forward pass —
         one host->device row write — so it is far cheaper than a cold
-        start but, unlike warm adoption, pays real copy bytes."""
+        start but, unlike warm adoption, pays real copy bytes.
+
+        Source tagging: an entry the fleet migrated from another host
+        still owes its modeled inter-host transfer wall
+        (``Snapshot.copy_seconds``); the FIRST restore claims it — the
+        event is tagged ``source="remote"`` with the origin host and the
+        copy charge, and lands between a local restore and a cold
+        prefill.  The entry is local thereafter (later restores tag
+        ``source="local"``)."""
         req.partition = row
         req.admitted_s = self.now
         req.state = State.PREFILL
+        copy_s = snap.claim_copy() if hasattr(snap, "claim_copy") else 0.0
         t0 = time.perf_counter()
         row_caches = jax.tree.map(jnp.asarray, snap.payload)
         self.caches = M.cache_write_row(self.caches, row_caches, row)
         jax.block_until_ready(jax.tree.leaves(self.caches)[0])
-        wall = time.perf_counter() - t0
+        wall = time.perf_counter() - t0 + copy_s
         self.now += wall
-        self.events.append(StepEvent(self.now, "restore", wall,
-                                     {"rid": req.rid, "key": snap.key,
-                                      "bytes": snap.nbytes, "row": row}))
+        detail = {"rid": req.rid, "key": snap.key, "bytes": snap.nbytes,
+                  "row": row, "source": "remote" if copy_s else "local"}
+        if copy_s:
+            detail["origin"] = snap.origin_host
+            detail["copy_s"] = copy_s
+            self.remote_restore_starts += 1
+        self.events.append(StepEvent(self.now, "restore", wall, detail))
         self._activate(req, row)
         self.restore_starts += 1
 
@@ -725,6 +740,7 @@ class ServeEngine:
             "cold_starts": self.cold_starts,
             "warm_starts": self.warm_starts,
             "restore_starts": self.restore_starts,
+            "remote_restore_starts": self.remote_restore_starts,
             "snapshots_taken": sum(1 for e in self.events
                                    if e.kind == "snapshot"),
             "events": self.events,

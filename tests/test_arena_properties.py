@@ -15,7 +15,7 @@ from collections import deque
 
 import pytest
 
-from repro.cluster import HostMemoryBroker
+from repro.cluster import BudgetLedger, HostMemoryBroker
 from repro.core.arena import ArenaSpec
 from repro.core.hotmem import HotMemManager
 from repro.core.vanilla import VanillaPagedManager
@@ -27,6 +27,9 @@ OP_KINDS = ("reserve", "grow", "release", "fork", "plug", "unplug")
 
 BROKER_OP_KINDS = ("request", "drain", "release", "claim", "cancel",
                    "snap_put", "snap_get", "snap_drop")
+
+LEDGER_OP_KINDS = ("take", "release", "escrow_in", "escrow_out",
+                   "snap_charge", "snap_credit")
 
 
 # ---------------------------------------------------------------- drivers
@@ -173,6 +176,52 @@ def _seeded_broker_ops(seed, n_ops):
              rng.randint(0, 15)) for _ in range(n_ops)]
 
 
+def run_ledger_ops(ops, budget=32, n_replicas=3):
+    """Interpret an op stream directly against ``BudgetLedger`` — the
+    extracted conservation core the broker (and every fleet host) now
+    delegates to.  Arbitrary legal interleavings of grant fills, unplug
+    releases, escrow flows, and snapshot charges keep
+
+        free + sum(granted) + escrow + snapshot == budget
+
+    after EVERY op (``check`` is the broker-independent code path)."""
+    led = BudgetLedger(budget)
+    rids = [f"r{i}" for i in range(n_replicas)]
+    for r in rids:
+        led.carve(r, budget // (2 * n_replicas))
+    led.check()
+    for kind, a, b in ops:
+        rid = rids[a % n_replicas]
+        if kind == "take":
+            got = led.take_free(rid, b % 8)
+            assert 0 <= got <= b % 8           # clipped, never overdrafts
+        elif kind == "release":
+            have = led.granted[rid]
+            if have:
+                led.release(rid, 1 + b % have)
+        elif kind == "escrow_in":
+            have = led.granted[rid]
+            if have:
+                led.escrow_fill(rid, 1 + b % have)
+        elif kind == "escrow_out":
+            if led.escrow_units:
+                led.escrow_claim(rid, 1 + b % led.escrow_units)
+        elif kind == "snap_charge":
+            if led.free_units:
+                led.snapshot_charge(1 + b % led.free_units)
+        elif kind == "snap_credit":
+            if led.snapshot_units:
+                led.snapshot_credit(1 + b % led.snapshot_units)
+        led.check()                            # conservation, every event
+    return led
+
+
+def _seeded_ledger_ops(seed, n_ops):
+    rng = random.Random(seed)
+    return [(rng.choice(LEDGER_OP_KINDS), rng.randint(0, 15),
+             rng.randint(0, 15)) for _ in range(n_ops)]
+
+
 # ------------------------------------------------- hypothesis (if present)
 
 try:
@@ -225,6 +274,17 @@ if HAVE_HYPOTHESIS:
     @given(BROKER_OPS, st.integers(2, 4))
     def test_async_broker_conservation(ops, n_replicas):
         run_async_broker_ops(ops, n_replicas)
+
+    LEDGER_OPS = st.lists(
+        st.tuples(st.sampled_from(LEDGER_OP_KINDS),
+                  st.integers(0, 15), st.integers(0, 15)),
+        min_size=1, max_size=80,
+    )
+
+    @settings(max_examples=200, deadline=None)
+    @given(LEDGER_OPS, st.integers(2, 4))
+    def test_ledger_conservation(ops, n_replicas):
+        run_ledger_ops(ops, n_replicas=n_replicas)
 else:
     def test_hypothesis_missing_is_reported():
         """Collection must stay green without hypothesis; the seeded
@@ -249,6 +309,55 @@ def test_vanilla_invariants_seeded(seed):
 @pytest.mark.parametrize("n_replicas", [2, 3, 4])
 def test_async_broker_conservation_seeded(seed, n_replicas):
     run_async_broker_ops(_seeded_broker_ops(2000 + seed, 80), n_replicas)
+
+
+@pytest.mark.parametrize("seed", range(25))
+@pytest.mark.parametrize("n_replicas", [2, 3, 4])
+def test_ledger_conservation_seeded(seed, n_replicas):
+    run_ledger_ops(_seeded_ledger_ops(3000 + seed, 80),
+                   n_replicas=n_replicas)
+
+
+def test_ledger_scripted_flows_and_overdraft_guards():
+    """Exact-arithmetic walk through every ledger verb, plus the loud
+    failures: each account rejects an overdraft AT the flow (so a leak
+    is attributed to the illegal move, not discovered later)."""
+    led = BudgetLedger(16)
+    led.carve("a", 4)
+    led.carve("b", 4)                          # free 8
+    led.check()
+    assert led.take_free("a", 5) == 5          # free 3, a=9
+    assert led.take_free("b", 9) == 3          # clipped to the pool
+    led.check()
+    assert led.free_units == 0 and led.granted == {"a": 9, "b": 7}
+    led.escrow_fill("b", 2)                    # b=5, escrow 2
+    led.escrow_claim("a", 2)                   # a=11, escrow 0
+    led.release("a", 6)                        # free 6
+    led.snapshot_charge(5)                     # free 1, snapshot 5
+    led.snapshot_credit(0)                     # explicit no-op
+    led.snapshot_credit(5)                     # free 6, snapshot 0
+    led.check()
+    assert led.free_units == 6
+    assert led.granted == {"a": 5, "b": 5}
+    assert led.escrow_units == 0 and led.snapshot_units == 0
+    # overdraft guards, one per account
+    with pytest.raises(AssertionError):
+        led.carve("a", 1)                      # double boot
+    with pytest.raises(AssertionError):
+        led.carve("c", 7)                      # beyond the free pool
+    with pytest.raises(AssertionError):
+        led.release("a", 6)                    # more than granted
+    with pytest.raises(AssertionError):
+        led.escrow_fill("a", 6)                # more than the victim holds
+    with pytest.raises(AssertionError):
+        led.escrow_claim("a", 1)               # empty escrow
+    with pytest.raises(AssertionError):
+        led.snapshot_charge(7)                 # beyond the free pool
+    with pytest.raises(AssertionError):
+        led.snapshot_credit(1)                 # empty pool charge
+    with pytest.raises(AssertionError):
+        led.take_free("nope", 1)               # unregistered replica
+    led.check()                                # guards mutated nothing
 
 
 def _check_unplug_only_free_suffix(n_live, k):

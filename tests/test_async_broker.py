@@ -14,15 +14,14 @@ after every event.  The three properties the tier pins down:
   (c) a victim finishing naturally fills/cancels the remainder of its
       open order without double-releasing units.
 """
-from collections import deque
-
 import pytest
 
 from repro.cluster import ClusterSim, HostMemoryBroker, Router
-from repro.serving.request import PROFILES, Request, State
+from repro.serving.request import PROFILES, Request
 
 
-from conftest import fake_clock as _fake_clock, mk_async_broker as _mk
+from conftest import StubReplica as _StubReplica, \
+    fake_clock as _fake_clock, mk_async_broker as _mk
 
 
 # ----------------------------------------------------- (a) conservation
@@ -194,93 +193,9 @@ def test_orders_capped_by_outstanding():
 # ------------------------------------------- (b) overlap on the fake clock
 
 
-class _StubReplica:
-    """Deterministic metadata-only replica, ``ClusterSim``-compatible:
-    decode costs exactly 1.0 virtual seconds, an order-drain chunk 0.25,
-    so the interleaving (and hence the whole schedule) is a pure function
-    of the script — no wall-clock measurement anywhere."""
-
-    DECODE_S = 1.0
-    DRAIN_S = 0.25
-
-    def __init__(self, rid, broker, units, decode_steps=10):
-        self.rid = rid
-        self.broker = broker
-        self.units = units
-        self.decode_steps = decode_steps
-        self.now = 0.0
-        self.pending: deque = deque()
-        self.active: dict[str, int] = {}
-        self.warm: dict[str, list] = {}
-        self.done: list = []
-        self.events: list[tuple[float, str, int]] = []
-        self._orders: deque = deque()
-        self._grants: list = []
-        broker.register(rid, units, load=self.load,
-                        order_sink=self._orders.append, mode="stub")
-
-    def load(self) -> int:
-        return len(self.active) + len(self.pending)
-
-    def host_work(self) -> bool:
-        return bool(self._orders) or bool(self._grants)
-
-    def request(self, want) -> object:
-        g = self.broker.request_grant(self.rid, want)
-        self.units += g.granted
-        if not g.done or g.available:
-            self._grants.append(g)
-        return g
-
-    def _tick(self, todo: deque) -> None:
-        while todo and todo[0].submit_s <= self.now:
-            req = todo.popleft()
-            self.active[req.rid] = self.decode_steps
-            req.state = State.RUNNING
-            self.pending.append(req)
-        # requester side: claim fills at our own tick boundary
-        for g in list(self._grants):
-            got = self.broker.claim_grant(g)
-            if got:
-                self.units += got
-                self.events.append((self.now, "fill", got))
-            if g.done and g.available == 0:
-                self._grants.remove(g)
-        # victim side: drain one chunk of the front order per tick
-        while self._orders and not self._orders[0].open:
-            self._orders.popleft()
-        if self._orders:
-            o = self._orders[0]
-            if self.units > 0:
-                self.now += self.DRAIN_S
-                acc = self.broker.fulfill_order(o.order_id, 1)
-                self.units -= acc
-                self.events.append((self.now, "drain", acc))
-            else:
-                self.broker.cancel_order(o.order_id)
-                self._orders.popleft()
-        elif self.active:
-            self.now += self.DECODE_S
-            # record how many host-wide units were still owed while THIS
-            # decode step ran: >0 means decode overlapped an open order
-            self.events.append((self.now, "decode",
-                                self.broker.pending_units()))
-            for rid in list(self.active):
-                self.active[rid] -= 1
-                if self.active[rid] <= 0:
-                    del self.active[rid]
-                    req = self.pending.popleft()
-                    req.state = State.DONE
-                    req.done_s = self.now
-                    self.done.append(req)
-        else:
-            self.now += 0.1
-        self.broker.check_invariants()
-
-    def metrics(self):
-        return {"reclaimed_bytes": 0, "migrated_bytes": 0,
-                "reclaim_events": sum(1 for e in self.events
-                                      if e[1] == "drain")}
+# the deterministic stub replica lives in tests/conftest.py
+# (``StubReplica``) — the fleet suite scripts multi-host schedules with
+# the same stub, so there is exactly one definition of its timings
 
 
 def test_decode_overlaps_order_drain_on_fake_clock():
