@@ -6,21 +6,120 @@ Prints ``name,us_per_call,derived`` CSV.  Roofline terms per (arch x shape x
 mesh) come from the dry-run (see repro.launch.dryrun and EXPERIMENTS.md);
 these benchmarks measure the paper's behavioural claims with real device ops
 on reduced configs.
+
+Scenario mode — the SLO-tiered multi-tenant regression surface:
+
+  PYTHONPATH=src python -m benchmarks.run --scenarios [--smoke] [--seed N]
+      [--check] [--update-baseline] [--baseline PATH]
+
+Runs the ``repro.cluster.scenarios`` bank (deterministic ModelReplica
+fleet: no device ops, bit-identical rows for a fixed seed) and writes the
+rows to the baseline file (default ``benchmarks/BENCH_6.json``) under
+``--update-baseline``, or compares against the committed baseline under
+``--check``: any scenario missing from the new run fails, and any
+time-valued field (``TIME_FIELDS`` + the per-tier TTFT p99s) regressing
+more than 20% over baseline fails.  ``--smoke`` restricts to the smallest
+scenario per family (the fast-CI subset); ``--check`` always runs the
+full bank so the gate covers every committed row.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
+
+REGRESSION_SLACK = 1.2          # fail --check if new > old * this
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_6.json")
+
+
+def _time_values(row: dict) -> dict:
+    """The fields the regression gate compares: scalar time medians plus
+    the per-tier TTFT p99 map, flattened to ``field`` / ``field.tier``."""
+    from repro.cluster.scenarios import TIME_FIELDS
+    out = {}
+    for f in TIME_FIELDS:
+        if row.get(f) is not None:
+            out[f] = row[f]
+    for tier, v in (row.get("ttft_p99_ms_by_tier") or {}).items():
+        if v is not None:
+            out[f"ttft_p99_ms_by_tier.{tier}"] = v
+    return out
+
+
+def run_scenarios(args) -> int:
+    from repro.cluster.scenarios import SMOKE, run_bank
+
+    names = list(SMOKE) if args.smoke and not args.check else None
+    rows = run_bank(names, seed=args.seed)
+    for name in sorted(rows):
+        r = rows[name]
+        print(f"{name}: requests={r['requests']} completed={r['completed']} "
+              f"killed={r['killed']} p99_by_tier={r['ttft_p99_ms_by_tier']}")
+
+    if args.update_baseline:
+        with open(args.baseline, "w") as f:
+            json.dump(rows, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"baseline written: {args.baseline} ({len(rows)} scenarios)")
+        return 0
+
+    if args.check:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        failures = []
+        for name, old in sorted(base.items()):
+            new = rows.get(name)
+            if new is None:
+                failures.append(f"{name}: missing from the new run")
+                continue
+            olds, news = _time_values(old), _time_values(new)
+            for field, ov in sorted(olds.items()):
+                nv = news.get(field)
+                if nv is None:
+                    failures.append(f"{name}.{field}: vanished "
+                                    f"(baseline {ov})")
+                elif ov > 0 and nv > ov * REGRESSION_SLACK:
+                    failures.append(
+                        f"{name}.{field}: {nv} vs baseline {ov} "
+                        f"(+{100.0 * (nv / ov - 1.0):.0f}% > "
+                        f"{100.0 * (REGRESSION_SLACK - 1.0):.0f}% slack)")
+        if failures:
+            print(f"\n--check FAILED ({len(failures)}):")
+            for msg in failures:
+                print(f"  {msg}")
+            return 1
+        print(f"\n--check ok: {len(base)} scenarios within "
+              f"{100.0 * (REGRESSION_SLACK - 1.0):.0f}% of baseline")
+    return 0
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark names")
+    ap.add_argument("--scenarios", action="store_true",
+                    help="run the multi-tenant scenario bank instead of "
+                         "the device benchmarks")
+    ap.add_argument("--smoke", action="store_true",
+                    help="scenario mode: smallest scenario per family only")
+    ap.add_argument("--check", action="store_true",
+                    help="scenario mode: compare the full bank against the "
+                         "committed baseline; exit 1 on >20%% regression")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="scenario mode: rewrite the baseline file")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="scenario baseline path (default benchmarks/"
+                         "BENCH_6.json)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="scenario bank seed (baseline is seed 0)")
     args = ap.parse_args()
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+    if args.scenarios:
+        raise SystemExit(run_scenarios(args))
+
     from benchmarks import figures
 
     print("name,us_per_call,derived")

@@ -30,10 +30,16 @@ pinned to A pulls those snapshots over (``mig`` column; modeled
 inter-host copy over real payload bytes), so A restores remotely
 (``remote`` column) instead of cold-prefilling.
 
+``--scenario NAME`` runs one entry of the multi-tenant scenario bank
+(``repro.cluster.scenarios``) instead of the engine demo and prints its
+report row — the same deterministic rows ``benchmarks/run.py
+--scenarios`` gates against ``BENCH_6.json``.
+
   PYTHONPATH=src python examples/cluster_demo.py
   PYTHONPATH=src python examples/cluster_demo.py \
       --policy snapshot_affinity --modes hotmem
   PYTHONPATH=src python examples/cluster_demo.py --hosts 2 --modes hotmem
+  PYTHONPATH=src python examples/cluster_demo.py --scenario slo_tiered
 """
 import argparse
 import os
@@ -89,8 +95,25 @@ def main() -> None:
                     help="number of hosts; > 1 places replicas across "
                          "per-host brokers and enables cross-host "
                          "snapshot migration (FleetSim)")
+    ap.add_argument("--scenario", default=None,
+                    help="run one scenario-bank entry (see "
+                         "repro.cluster.scenarios.SCENARIOS) and print "
+                         "its report row instead of the engine demo")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="scenario seed (--scenario only)")
     args = ap.parse_args()
     assert args.hosts >= 1
+
+    if args.scenario is not None:
+        import json
+
+        from repro.cluster.scenarios import SCENARIOS, run_scenario
+        assert args.scenario in SCENARIOS, \
+            f"unknown scenario {args.scenario!r} " \
+            f"(have {', '.join(sorted(SCENARIOS))})"
+        row = run_scenario(args.scenario, seed=args.seed)
+        print(json.dumps(row, indent=1))
+        return
 
     cfg = reduced(get_config("qwen2-7b"))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -99,8 +122,8 @@ def main() -> None:
     bpp = spec.blocks_per_partition
     # the snapshot pool is paid for by the policies that exploit it —
     # and always on a fleet, where it is what migration moves
-    pooled = args.policy in ("snapshot_affinity", "drain_weighted") \
-        or args.hosts > 1
+    pooled = args.policy in ("snapshot_affinity", "drain_weighted",
+                             "slo_tiered") or args.hosts > 1
     pool_units = 4 * bpp if pooled else None
     # one replica per host (min 2, so the steal/pinned scenario exists)
     rids = [chr(ord("A") + k) for k in range(max(2, args.hosts))]

@@ -12,16 +12,25 @@ hosts of ``ServeEngine`` replicas on one deterministic virtual timebase;
 ``ClusterSim`` is its single-host specialization.  Router start-path
 tiers (``drain_weighted``): local warm > local snapshot > remote
 snapshot > least-loaded, drain-penalized by how many blocks a replica
-owes to open reclaim orders."""
+owes to open reclaim orders.  ``repro.cluster.scenarios`` packages the
+whole stack into a bank of named, seeded, deterministic multi-tenant
+scenarios, each emitting one schema-stable report row (the regression
+surface ``benchmarks/run.py --scenarios`` tracks)."""
 from repro.cluster.fleet import FleetScheduler, MigrationRecord
 from repro.cluster.host import (AlwaysGrantBroker, Grant, HostMemoryBroker,
                                 MemoryBroker, ReclaimOrder, StealRecord)
-from repro.cluster.ledger import BudgetLedger
+from repro.cluster.ledger import DEFAULT_TENANT, BudgetLedger
 from repro.cluster.router import Router
+from repro.cluster.scenarios import (ROW_SCHEMA, SCENARIOS, SMOKE,
+                                     TIME_FIELDS, HedgedRoutePolicy,
+                                     ModelReplica, run_bank, run_scenario)
 from repro.cluster.sim import ClusterSim, FleetSim
 from repro.cluster.snapshots import Snapshot, SnapshotPool, SqueezeRecord
 
-__all__ = ["AlwaysGrantBroker", "BudgetLedger", "ClusterSim", "FleetSim",
-           "FleetScheduler", "Grant", "HostMemoryBroker", "MemoryBroker",
-           "MigrationRecord", "ReclaimOrder", "StealRecord", "Router",
-           "Snapshot", "SnapshotPool", "SqueezeRecord"]
+__all__ = ["AlwaysGrantBroker", "BudgetLedger", "ClusterSim",
+           "DEFAULT_TENANT", "FleetSim", "FleetScheduler", "Grant",
+           "HedgedRoutePolicy", "HostMemoryBroker", "MemoryBroker",
+           "MigrationRecord", "ModelReplica", "ROW_SCHEMA", "ReclaimOrder",
+           "Router", "SCENARIOS", "SMOKE", "Snapshot", "SnapshotPool",
+           "SqueezeRecord", "StealRecord", "TIME_FIELDS", "run_bank",
+           "run_scenario"]

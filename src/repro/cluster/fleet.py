@@ -171,7 +171,9 @@ class FleetScheduler:
             return None
         src, dst = self.brokers[src_host], self.brokers[dst_host]
         snap = src.snapshots.peek(key)
-        if not dst.snapshot_room(key, snap.units):
+        # the entry keeps its owner tenant across hosts: the destination
+        # charges its ledger on the SAME tenant's sub-budget account
+        if not dst.snapshot_room(key, snap.units, tenant=snap.tenant):
             self.migration_denied += 1           # destination under
             return None                          # pressure: cold-start
         units, nbytes = snap.units, snap.nbytes
@@ -184,7 +186,8 @@ class FleetScheduler:
         ok = dst.snapshot_put(key, units=units, payload=payload,
                               tokens=tokens, nbytes=nbytes,
                               replica_id=snap.replica_id,
-                              origin_host=src_host, copy_seconds=copy_s)
+                              origin_host=src_host, copy_seconds=copy_s,
+                              tenant=snap.tenant)
         assert ok, "room check promised space at the destination"
         rec = MigrationRecord(key=key, src=src_host, dst=dst_host,
                               units=units, nbytes=nbytes,

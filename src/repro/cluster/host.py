@@ -198,13 +198,14 @@ class MemoryBroker:
     # Snapshot pool API: brokers without a host snapshot pool decline every
     # offer and miss every lookup, so engines wired to them behave exactly
     # as before the pool existed (warm state is simply discarded).
-    def snapshot_room(self, key: str, units: int) -> bool:
+    def snapshot_room(self, key: str, units: int, *, tenant: str = "",
+                      replica_id: str = "") -> bool:
         return False
 
     def snapshot_put(self, key: str, *, units: int, payload: Any = None,
                      tokens: int = 0, nbytes: int = 0,
                      replica_id: str = "", origin_host: str = "",
-                     copy_seconds: float = 0.0) -> bool:
+                     copy_seconds: float = 0.0, tenant: str = "") -> bool:
         return False
 
     def snapshot_lookup(self, key: str) -> Optional[Snapshot]:
@@ -240,10 +241,13 @@ class HostMemoryBroker(MemoryBroker):
 
     def __init__(self, budget_units: int, *, async_reclaim: bool = False,
                  clock: Optional[Callable[[], float]] = None,
-                 snapshot_pool_units: Optional[int] = None):
+                 snapshot_pool_units: Optional[int] = None,
+                 tenants: Optional[dict[str, int]] = None):
         # all unit accounts (free / granted / escrow / snapshot charge)
-        # live in the ledger; the broker only orchestrates flows
-        self.ledger = BudgetLedger(budget_units)
+        # live in the ledger; the broker only orchestrates flows.
+        # ``tenants``: optional per-tenant sub-budget split (must sum to
+        # the budget) — enables the fairness rule in _squeeze_snapshots
+        self.ledger = BudgetLedger(budget_units, tenants=tenants)
         self.async_reclaim = async_reclaim
         self._clock = clock if clock is not None else time.perf_counter
         # host snapshot pool (None = disabled): warm-restart state charged
@@ -294,18 +298,21 @@ class HostMemoryBroker(MemoryBroker):
                  load: Optional[Callable[[], int]] = None,
                  mode: Optional[str] = None,
                  order_sink: Optional[Callable[[ReclaimOrder], None]] = None,
-                 ) -> None:
+                 tenant: Optional[str] = None) -> None:
         """VM boot: carve the replica's initial plug out of the free pool
         (squeezing snapshots first if the pool holds the needed slack —
-        a booting VM outranks cached warm-restart state)."""
+        a booting VM outranks cached warm-restart state).  ``tenant``
+        binds the replica to its sub-budget (required on multi-tenant
+        hosts; the squeeze respects other tenants' sub-budgets)."""
         assert replica_id not in self.granted, replica_id
+        tenant = self.ledger.resolve_tenant(tenant)
         if initial_units > self.free_units:
             self._squeeze_snapshots(initial_units - self.free_units,
-                                    requester=replica_id)
+                                    requester=replica_id, tenant=tenant)
         assert initial_units <= self.free_units, \
             f"host budget exhausted registering {replica_id}: " \
             f"need {initial_units}, free {self.free_units}"
-        self.ledger.carve(replica_id, initial_units)
+        self.ledger.carve(replica_id, initial_units, tenant=tenant)
         if reclaim is not None:
             self._reclaim[replica_id] = reclaim
         if load is not None:
@@ -386,52 +393,124 @@ class HostMemoryBroker(MemoryBroker):
             self.ledger.release(replica_id, units)
 
     # ----------------------------------------------------- snapshot pool
-    def snapshot_room(self, key: str, units: int) -> bool:
+    def _snap_tenant(self, tenant: str, replica_id: str) -> str:
+        """Resolve the owning tenant of a snapshot operation: an explicit
+        ``tenant`` wins, else the writing replica's tenant, else the
+        ledger's sole default tenant (asserts on ambiguity)."""
+        if tenant:
+            return self.ledger.resolve_tenant(tenant)
+        if replica_id in self.ledger.tenant_of:
+            return self.ledger.tenant_of[replica_id]
+        return self.ledger.resolve_tenant(None)
+
+    def _squeeze_eligible(self, tenant: str
+                          ) -> Callable[[Snapshot], bool]:
+        """The fairness rule: ``tenant``'s pressure may drop its OWN
+        entries freely, but another tenant's entry only while that owner
+        stays at or above its sub-budget afterwards — one tenant's grant
+        can never squeeze another tenant's snapshots past its
+        sub-budget."""
+        led = self.ledger
+        def ok(snap: Snapshot) -> bool:
+            owner = snap.tenant or led.resolve_tenant(None)
+            if owner == tenant:
+                return True
+            return led.tenant_usage(owner) - snap.units \
+                >= led.sub_budgets[owner]
+        return ok
+
+    def _evict_plan(self, key: str, units: int, tenant: str
+                    ) -> Optional[list[str]]:
+        """Exact eviction plan for inserting a ``units``-block snapshot
+        under ``key``: the ordered entry keys to drop (same-key
+        predecessor first, then LRU order, skipping tenant-protected
+        entries) so the insert fits both the free pool and the pool cap —
+        or ``None`` when no eligible plan exists.  ``snapshot_room`` asks
+        whether a plan exists; ``snapshot_put`` executes the same plan, so
+        the two can never disagree."""
+        pool = self.snapshots
+        if pool is None or units <= 0 or self._inline_reclaim:
+            return None
+        if not pool.fits(units):
+            return None
+        ok = self._squeeze_eligible(tenant)
+        plan: list[str] = []
+        freed = 0
+        same = pool.peek(key)
+        if same is not None:
+            if not ok(same):
+                return None     # cannot replace a protected entry
+            plan.append(key)
+            freed += same.units
+
+        def fits_now() -> bool:
+            return units <= self.free_units + freed and (
+                pool.max_units is None
+                or pool.units - freed + units <= pool.max_units)
+
+        if fits_now():
+            return plan
+        for k in pool.keys():               # LRU -> MRU order
+            if k == key:
+                continue                    # already planned (replacement)
+            snap = pool.peek(k)
+            if not ok(snap):
+                continue                    # protected: skip, not reorder
+            plan.append(k)
+            freed += snap.units
+            if fits_now():
+                return plan
+        return None
+
+    def snapshot_room(self, key: str, units: int, *, tenant: str = "",
+                      replica_id: str = "") -> bool:
         """Would a ``units``-block snapshot for ``key`` fit right now?  A
-        same-key predecessor's charge and every LRU-evictable entry count
-        as reclaimable headroom; insertion never creates pressure (it only
+        same-key predecessor's charge and every *squeeze-eligible* entry
+        count as reclaimable headroom (another tenant's entries only down
+        to its sub-budget); insertion never creates pressure (it only
         spends free units), so the answer is also the engine's gate for
         paying the copy-out at all.  Declines while a sync inline steal
         is in flight: mid-steal free units belong to the open grant (see
         ``_reclaim_from_idlest``)."""
-        if self.snapshots is None or units <= 0 or self._inline_reclaim:
+        if self.snapshots is None:
             return False
-        if not self.snapshots.fits(units):
-            return False
-        return units <= self.free_units + self.snapshots.units
+        t = self._snap_tenant(tenant, replica_id)
+        return self._evict_plan(key, units, t) is not None
 
     def snapshot_put(self, key: str, *, units: int, payload: Any = None,
                      tokens: int = 0, nbytes: int = 0,
                      replica_id: str = "", origin_host: str = "",
-                     copy_seconds: float = 0.0) -> bool:
+                     copy_seconds: float = 0.0, tenant: str = "") -> bool:
         """Persist a copied-out partition into the pool, charging ``units``
-        against the free pool.  A same-key predecessor is replaced; LRU
-        entries are evicted for cap/space; returns False (nothing changed)
-        when the snapshot cannot fit.  ``origin_host``/``copy_seconds``
-        mark a cross-host migration (``repro.cluster.fleet``): the modeled
-        inter-host copy wall is paid by the first restore that uses the
-        entry, so a remote restore lands between a local restore and a
-        cold prefill."""
-        if not self.snapshot_room(key, units):
+        against the free pool on the owner tenant's account.  A same-key
+        predecessor is replaced; squeeze-eligible LRU entries are evicted
+        for cap/space; returns False (nothing changed) when the snapshot
+        cannot fit.  ``origin_host``/``copy_seconds`` mark a cross-host
+        migration (``repro.cluster.fleet``): the modeled inter-host copy
+        wall is paid by the first restore that uses the entry, so a remote
+        restore lands between a local restore and a cold prefill."""
+        if self.snapshots is None:
+            return False
+        t = self._snap_tenant(tenant, replica_id)
+        plan = self._evict_plan(key, units, t)
+        if plan is None:
             return False
         pool = self.snapshots
-        replacing = key in pool
-        self.ledger.snapshot_credit(pool.drop(key))  # same-key charge back
-        if replacing:
-            pool.replaced += 1
-        while units > self.free_units or not (
-                pool.max_units is None
-                or pool.units + units <= pool.max_units):
-            evicted = pool.evict_lru()
-            assert evicted is not None, "room check promised space"
-            self.ledger.snapshot_credit(evicted.units)
+        for k in plan:
+            if k == key:                    # same-key replacement
+                snap = pool.peek(key)
+                pool.drop(key)
+                pool.replaced += 1
+            else:
+                snap = pool.evict(k)
+            self.ledger.snapshot_credit(snap.units, snap.tenant or None)
         now = self._clock()
-        self.ledger.snapshot_charge(units)
+        self.ledger.snapshot_charge(units, t)
         pool.insert(Snapshot(key=key, units=units, tokens=tokens,
                              nbytes=nbytes, payload=payload,
                              replica_id=replica_id, created_at=now,
                              last_used=now, origin_host=origin_host,
-                             copy_seconds=copy_seconds))
+                             copy_seconds=copy_seconds, tenant=t))
         return True
 
     def snapshot_lookup(self, key: str) -> Optional[Snapshot]:
@@ -462,35 +541,49 @@ class HostMemoryBroker(MemoryBroker):
 
     def snapshot_drop(self, key: str) -> int:
         """Explicitly invalidate ``key`` (tests / staleness): its charge
-        returns to the free pool.  Returns units freed."""
+        returns to the free pool (owner tenant's account).  Returns units
+        freed."""
         if self.snapshots is None:
             return 0
-        freed = self.snapshots.drop(key)
-        self.ledger.snapshot_credit(freed)
-        return freed
+        snap = self.snapshots.peek(key)
+        if snap is None:
+            return 0
+        self.snapshots.drop(key)
+        self.ledger.snapshot_credit(snap.units, snap.tenant or None)
+        return snap.units
 
     def snapshot_units(self) -> int:
         """The pool's current charge against the host budget."""
         return self.snapshots.units if self.snapshots is not None else 0
 
-    def _squeeze_snapshots(self, deficit: int, *, requester: str) -> int:
+    def _squeeze_snapshots(self, deficit: int, *, requester: str,
+                           tenant: Optional[str] = None) -> int:
         """The squeeze-first reclaim rule: drop LRU snapshots until
-        ``deficit`` is covered or the pool is empty.  Metadata-only — zero
-        bytes migrate, no replica is ordered to shrink, the freed units
-        land in the free pool immediately.  Returns units freed."""
+        ``deficit`` is covered or no eligible entry remains.  Metadata-only
+        — zero bytes migrate, no replica is ordered to shrink, the freed
+        units land in the free pool immediately.  Eligibility is the
+        tenant fairness rule (``_squeeze_eligible``): the requesting
+        tenant drops its own entries freely but can take another tenant's
+        only down to that tenant's sub-budget.  Returns units freed."""
         if self.snapshots is None or deficit <= 0:
             return 0
+        if tenant is None:
+            tenant = self._snap_tenant("", requester)
+        ok = self._squeeze_eligible(tenant)
         freed = 0
         now = self._clock()
         while freed < deficit:
-            snap = self.snapshots.evict_lru()
+            snap = self.snapshots.evict_lru(eligible=ok)
             if snap is None:
                 break
+            # credit per entry on its OWNER's account so the protection
+            # predicate sees up-to-date tenant usage for the next pick
+            self.ledger.snapshot_credit(snap.units, snap.tenant or None)
             freed += snap.units
             self.squeeze_log.append(SqueezeRecord(
                 requester=requester, key=snap.key, units=snap.units,
-                nbytes=snap.nbytes, at=now))
-        self.ledger.snapshot_credit(freed)
+                nbytes=snap.nbytes, at=now,
+                tenant=snap.tenant or self.ledger.resolve_tenant(None)))
         return freed
 
     # --------------------------------------------------- async order plane
@@ -541,7 +634,7 @@ class HostMemoryBroker(MemoryBroker):
     def _apply_fill(self, o: ReclaimOrder, k: int, *, wall: float,
                     ev: Optional[ReclaimEvent], natural: bool) -> None:
         g = self._order_grant[o.order_id]
-        self.ledger.escrow_fill(o.victim, k)
+        self.ledger.escrow_fill(o.victim, k, requester=o.requester)
         o.filled += k
         g.pending -= k
         g.available += k
@@ -702,6 +795,7 @@ class HostMemoryBroker(MemoryBroker):
             "squeezed_units": sum(r.units for r in self.squeeze_log),
             "snapshots": (self.snapshots.report()
                           if self.snapshots is not None else None),
+            "tenants": self.ledger.tenant_report(),
         }
 
     # ---------------------------------------------------------- invariants
@@ -717,6 +811,16 @@ class HostMemoryBroker(MemoryBroker):
             "pool charge diverged from the ledger"
         if self.snapshots is not None:
             self.snapshots.check_invariants()
+            # per-tenant cross-check: the pool's entries, grouped by owner,
+            # must sum to the ledger's tenant snapshot accounts
+            by_tenant: dict[str, int] = {}
+            for k in self.snapshots.keys():
+                s = self.snapshots.peek(k)
+                t = s.tenant or self.ledger.resolve_tenant(None)
+                by_tenant[t] = by_tenant.get(t, 0) + s.units
+            for t in self.ledger.sub_budgets:
+                assert by_tenant.get(t, 0) == self.ledger.tenant_snapshot(t), \
+                    f"tenant {t} pool entries diverged from ledger account"
         for o in self.orders.values():
             assert 0 <= o.filled + o.canceled <= o.units, o
             if o.open:

@@ -23,32 +23,109 @@ event — including cross-host snapshot migrations, which are a
 ``snapshot_credit`` on the source ledger and a ``snapshot_charge`` on
 the destination one, never a unit teleporting between budgets.
 
+Tenants: the ledger optionally splits the budget into per-tenant
+sub-budgets (``tenants={name: units}``, summing exactly to the budget).
+Every replica belongs to a tenant (``carve(..., tenant=)``), escrow
+fills are attributed to the *requesting* grant's tenant, and snapshot
+charges carry their owner tenant — so the host accounts are exactly the
+tenant account sums and the conservation law extends to
+
+    sum_over_tenants(free_t + granted_t + escrow_t + snapshot_t) == budget
+
+where ``free_t = sub_budget_t - usage_t`` may go *negative* for a tenant
+overdrawn into host slack (grants are work-conserving).  The fairness
+rule built on these accounts lives broker-side: one tenant's grant can
+squeeze another tenant's snapshots only while the owner stays at or
+above its sub-budget afterwards (``HostMemoryBroker._squeeze_snapshots``).
+Without an explicit ``tenants=`` map the ledger runs one implicit
+``"default"`` tenant owning the whole budget, and every pre-tenant call
+site behaves identically.
+
 Each verb asserts its own preconditions (no negative balances, no
 overdrafts), so an illegal flow fails loudly at the flow, not later at a
 ``check`` that can no longer say who leaked.
 """
 from __future__ import annotations
 
+from typing import Any, Optional
+
+DEFAULT_TENANT = "default"
+
 
 class BudgetLedger:
     """Unit-conservation ledger for one host's memory budget."""
 
-    def __init__(self, budget_units: int):
+    def __init__(self, budget_units: int,
+                 tenants: Optional[dict[str, int]] = None):
         assert budget_units > 0
         self.budget_units = budget_units
+        if tenants is None:
+            tenants = {DEFAULT_TENANT: budget_units}
+        assert tenants and all(v >= 0 for v in tenants.values()), tenants
+        assert sum(tenants.values()) == budget_units, \
+            f"tenant sub-budgets {tenants} must sum to budget {budget_units}"
+        self.sub_budgets: dict[str, int] = dict(tenants)
         self.free_units = budget_units
         self.granted: dict[str, int] = {}
         self.escrow_units = 0
         self.snapshot_units = 0
+        # tenant attribution: replicas map to tenants; escrow and snapshot
+        # units carry their owning tenant explicitly (granted is derived
+        # from the replica map, so it cannot diverge)
+        self.tenant_of: dict[str, str] = {}
+        self._tenant_escrow: dict[str, int] = {t: 0 for t in tenants}
+        self._tenant_snapshot: dict[str, int] = {t: 0 for t in tenants}
+
+    # -------------------------------------------------------------- tenants
+    def resolve_tenant(self, tenant: Optional[str] = None) -> str:
+        """Validate ``tenant``; ``None``/empty falls back to the sole
+        tenant (an explicit name is required on multi-tenant ledgers)."""
+        if tenant:
+            assert tenant in self.sub_budgets, \
+                f"unknown tenant {tenant!r} (have {sorted(self.sub_budgets)})"
+            return tenant
+        assert len(self.sub_budgets) == 1, \
+            "multi-tenant ledger: an explicit tenant is required"
+        return next(iter(self.sub_budgets))
+
+    def tenant_granted(self, tenant: str) -> int:
+        return sum(u for r, u in self.granted.items()
+                   if self.tenant_of[r] == tenant)
+
+    def tenant_escrow(self, tenant: str) -> int:
+        return self._tenant_escrow[tenant]
+
+    def tenant_snapshot(self, tenant: str) -> int:
+        return self._tenant_snapshot[tenant]
+
+    def tenant_usage(self, tenant: str) -> int:
+        """Units the tenant currently holds across granted + escrow +
+        snapshot (its footprint against its sub-budget)."""
+        return self.tenant_granted(tenant) + self._tenant_escrow[tenant] \
+            + self._tenant_snapshot[tenant]
+
+    def tenant_free(self, tenant: str) -> int:
+        """Sub-budget headroom; negative = overdrawn into host slack."""
+        return self.sub_budgets[tenant] - self.tenant_usage(tenant)
+
+    def tenant_report(self) -> dict[str, Any]:
+        return {t: {"sub_budget": self.sub_budgets[t],
+                    "granted": self.tenant_granted(t),
+                    "escrow": self._tenant_escrow[t],
+                    "snapshot": self._tenant_snapshot[t],
+                    "free": self.tenant_free(t)}
+                for t in sorted(self.sub_budgets)}
 
     # ------------------------------------------------------------- replicas
-    def carve(self, replica_id: str, units: int) -> None:
+    def carve(self, replica_id: str, units: int,
+              tenant: Optional[str] = None) -> None:
         """Boot-time plug: carve a new replica's initial holding out of
-        the free pool."""
+        the free pool, binding the replica to its tenant."""
         assert replica_id not in self.granted, replica_id
         assert 0 <= units <= self.free_units, \
             f"budget exhausted carving {units} for {replica_id}: " \
             f"free {self.free_units}"
+        self.tenant_of[replica_id] = self.resolve_tenant(tenant)
         self.free_units -= units
         self.granted[replica_id] = units
 
@@ -69,41 +146,60 @@ class BudgetLedger:
         self.free_units += units
 
     # --------------------------------------------------------------- escrow
-    def escrow_fill(self, victim: str, units: int) -> None:
+    def escrow_fill(self, victim: str, units: int, *,
+                    requester: Optional[str] = None) -> None:
         """Order drain: a victim's surrendered units enter escrow (owned
-        by an open grant, awaiting the requester's claim)."""
+        by an open grant, awaiting the requester's claim).  The escrow is
+        attributed to the *requester's* tenant — the grant owns those
+        units now — falling back to the victim's tenant when no requester
+        is named (direct ledger drives)."""
         assert 0 < units <= self.granted.get(victim, 0), (victim, units)
+        owner = requester if requester in self.tenant_of else victim
         self.granted[victim] -= units
         self.escrow_units += units
+        self._tenant_escrow[self.tenant_of[owner]] += units
 
     def escrow_claim(self, replica_id: str, units: int) -> None:
         """Grant completion: escrow -> the requester's holding."""
         assert 0 < units <= self.escrow_units, (units, self.escrow_units)
         assert replica_id in self.granted, replica_id
+        t = self.tenant_of[replica_id]
+        assert units <= self._tenant_escrow[t], \
+            f"tenant {t} claiming {units} escrowed units it owns " \
+            f"{self._tenant_escrow[t]} of"
         self.escrow_units -= units
+        self._tenant_escrow[t] -= units
         self.granted[replica_id] += units
 
     # ------------------------------------------------------------- snapshot
-    def snapshot_charge(self, units: int) -> None:
-        """Pool insert: free -> snapshot charge."""
+    def snapshot_charge(self, units: int,
+                        tenant: Optional[str] = None) -> None:
+        """Pool insert: free -> snapshot charge, owned by ``tenant``."""
         assert 0 < units <= self.free_units, (units, self.free_units)
         self.free_units -= units
         self.snapshot_units += units
+        self._tenant_snapshot[self.resolve_tenant(tenant)] += units
 
-    def snapshot_credit(self, units: int) -> None:
+    def snapshot_credit(self, units: int,
+                        tenant: Optional[str] = None) -> None:
         """Pool drop/evict/squeeze: snapshot charge -> free.  A zero
         credit is a no-op (callers pass through ``pool.drop`` returns)."""
         if units == 0:
             return
         assert 0 < units <= self.snapshot_units, \
             (units, self.snapshot_units)
+        t = self.resolve_tenant(tenant)
+        assert units <= self._tenant_snapshot[t], \
+            f"tenant {t} crediting {units} snapshot units it owns " \
+            f"{self._tenant_snapshot[t]} of"
         self.snapshot_units -= units
+        self._tenant_snapshot[t] -= units
         self.free_units += units
 
     # ------------------------------------------------------------ invariant
     def check(self) -> None:
         """THE conservation law — the one code path per host that proves
-        no unit was leaked or double-granted."""
+        no unit was leaked or double-granted, host-wide AND per-tenant."""
         assert self.free_units >= 0
         assert self.escrow_units >= 0
         assert self.snapshot_units >= 0
@@ -111,3 +207,21 @@ class BudgetLedger:
         assert self.free_units + sum(self.granted.values()) \
             + self.escrow_units + self.snapshot_units \
             == self.budget_units, "host units leaked or double-granted"
+        # tenant accounts sum exactly to the host accounts
+        assert sum(self.sub_budgets.values()) == self.budget_units
+        assert set(self.tenant_of.values()) <= set(self.sub_budgets)
+        assert all(v >= 0 for v in self._tenant_escrow.values())
+        assert all(v >= 0 for v in self._tenant_snapshot.values())
+        assert sum(self._tenant_escrow.values()) == self.escrow_units, \
+            "tenant escrow attribution diverged from the host account"
+        assert sum(self._tenant_snapshot.values()) == self.snapshot_units, \
+            "tenant snapshot attribution diverged from the host account"
+        # free_t is derived (sub_budget - usage, may be negative for an
+        # overdrawn tenant), so this sum is the real cross-check that the
+        # per-tenant accounts partition the host budget exactly
+        assert sum(self.tenant_free(t) for t in self.sub_budgets) \
+            == self.free_units, "tenant free headroom diverged"
+        assert sum(self.tenant_free(t) + self.tenant_granted(t)
+                   + self._tenant_escrow[t] + self._tenant_snapshot[t]
+                   for t in self.sub_budgets) == self.budget_units, \
+            "tenant conservation law violated"

@@ -43,6 +43,17 @@ and every incoming invocation must be assigned to one.  Policies:
                         load, id)`` — unlike the binary dodge above, a
                         replica owing 1 block outranks one owing 20, so
                         pressure spreads by *magnitude*, not presence.
+  * ``slo_tiered``    — latency-tiered spending of cached warm state:
+                        a "tight"/"standard" invocation routes exactly
+                        like ``drain_weighted`` (warm > local snapshot >
+                        remote snapshot > cold), but a "batch" invocation
+                        (``slo_tier_of(req) == "batch"``) deliberately
+                        AVOIDS replicas holding a warm row for its
+                        profile — batch traffic must not consume (or
+                        refresh) the warm/snapshot capacity the tight
+                        tier's tail depends on — and spreads cold by the
+                        weighted drain key.  ``tight_routes`` /
+                        ``batch_routes`` count the per-tier assignments.
 
 Ties break on replica id, so routing is deterministic for a fixed trace.
 A custom ``route_fn(req, engines) -> replica_id`` overrides the policy
@@ -74,8 +85,10 @@ from __future__ import annotations
 import random
 from typing import Callable, Optional
 
+from repro.serving.request import slo_tier_of
+
 POLICIES = ("least_loaded", "warm_affinity", "power_of_two",
-            "snapshot_affinity", "drain_weighted")
+            "snapshot_affinity", "drain_weighted", "slo_tiered")
 
 
 class Router:
@@ -93,6 +106,8 @@ class Router:
         self.snapshot_routes = 0              # route-time local-pool picks
         self.remote_routes = 0                # route-time remote-pool picks
         self.drain_avoided = 0                # picks the drain term changed
+        self.tight_routes = 0                 # slo_tiered: non-batch picks
+        self.batch_routes = 0                 # slo_tiered: batch picks
 
     def _score(self, rid: str, engines, backlog) -> tuple[int, str]:
         load = engines[rid].load() + (backlog or {}).get(rid, 0)
@@ -169,6 +184,25 @@ class Router:
             return 1
         return 2 if remote_exists else 3
 
+    def _route_tiered(self, req, engines: dict, backlog) -> str:
+        """The start-path-tiered pick (``drain_weighted``'s core, shared
+        with ``slo_tiered``'s non-batch traffic): best tier wins, weighted
+        drain key within the tier, per-tier route counters."""
+        remote = self.fleet is not None and \
+            self.fleet.snapshot_host(req.profile.name) is not None
+        tiers = {r: self._tier(r, req, engines, remote)
+                 for r in engines}
+        best = min(tiers.values())
+        rid = self._pick([r for r in engines if tiers[r] == best],
+                         engines, backlog, weighted=True)
+        if best == 0:
+            self.warm_routes += 1
+        elif best == 1:
+            self.snapshot_routes += 1
+        elif best == 2:
+            self.remote_routes += 1
+        return rid
+
     def route(self, req, engines: dict, backlog: Optional[dict] = None
               ) -> str:
         """Pick the replica for ``req``.  ``backlog`` counts routed-but-
@@ -192,19 +226,21 @@ class Router:
                 rid = self._pick(list(engines), engines, backlog)
                 self.snapshot_routes += 1
             elif rid is None and self.policy == "drain_weighted":
-                remote = self.fleet is not None and \
-                    self.fleet.snapshot_host(req.profile.name) is not None
-                tiers = {r: self._tier(r, req, engines, remote)
-                         for r in engines}
-                best = min(tiers.values())
-                rid = self._pick([r for r in engines if tiers[r] == best],
-                                 engines, backlog, weighted=True)
-                if best == 0:
-                    self.warm_routes += 1
-                elif best == 1:
-                    self.snapshot_routes += 1
-                elif best == 2:
-                    self.remote_routes += 1
+                rid = self._route_tiered(req, engines, backlog)
+            elif rid is None and self.policy == "slo_tiered":
+                if slo_tier_of(req) == "batch":
+                    # batch must not consume warm capacity: avoid replicas
+                    # holding a warm row for this profile (unless every
+                    # replica does), spread by the weighted drain key
+                    key = req.profile.name
+                    cold = [r for r, e in engines.items()
+                            if not e.warm.get(key)]
+                    rid = self._pick(cold or list(engines), engines,
+                                     backlog, weighted=True)
+                    self.batch_routes += 1
+                else:
+                    rid = self._route_tiered(req, engines, backlog)
+                    self.tight_routes += 1
             elif rid is None and self.policy == "power_of_two":
                 ids = sorted(engines)
                 pair = ids if len(ids) <= 2 else self._rng.sample(ids, 2)

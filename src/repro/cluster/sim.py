@@ -42,7 +42,7 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.cluster.router import Router
-from repro.serving.request import State
+from repro.serving.request import State, slo_tier_of, tenant_of
 
 
 class FleetSim:
@@ -153,9 +153,14 @@ class FleetSim:
         host lacks a restorable snapshot for the function but a peer
         holds one, migrate it now so the admission restores instead of
         cold-prefilling.  Skipped when the replica holds a warm row (an
-        adopt beats any restore — the copy would be wasted) and on
-        single-host sims (nowhere to migrate from)."""
+        adopt beats any restore — the copy would be wasted), for
+        batch-tier traffic (it starts cold by design — paying an
+        inter-host copy for it would spend exactly the capacity the tier
+        split protects), and on single-host sims (nowhere to migrate
+        from)."""
         if self.scheduler is None or len(self._brokers) < 2:
+            return
+        if slo_tier_of(req) == "batch":
             return
         if self.engines[target].warm.get(req.profile.name):
             return
@@ -198,6 +203,15 @@ class FleetSim:
             "snapshot_migrations": len(self.scheduler.migrations)
             if self.scheduler is not None else 0,
         }
+        by_tenant: dict[str, dict[str, int]] = {}
+        for r in done:
+            t = tenant_of(r) or "default"
+            d = by_tenant.setdefault(t, {"completed": 0, "killed": 0})
+            if r.state is State.DONE:
+                d["completed"] += 1
+            elif r.state is State.KILLED:
+                d["killed"] += 1
+        out["by_tenant"] = by_tenant
         if self.broker is not None:
             out["broker"] = self.broker.report()
         if self.scheduler is not None:

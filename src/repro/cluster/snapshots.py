@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 
 @dataclasses.dataclass
@@ -49,6 +49,11 @@ class Snapshot:
     # The first restore pays it (claim_copy) and the entry becomes local.
     origin_host: str = ""
     copy_seconds: float = 0.0
+    # owning tenant: the sub-budget this entry's charge counts against
+    # (empty = the ledger's sole default tenant).  The broker's fairness
+    # rule protects another tenant's entries from being squeezed below
+    # that tenant's sub-budget.
+    tenant: str = ""
 
     def claim_copy(self) -> float:
         """Pay the pending inter-host copy: returns the owed wall once
@@ -67,6 +72,7 @@ class SqueezeRecord:
     units: int
     nbytes: int
     at: float                    # broker-clock timestamp
+    tenant: str = ""             # the dropped entry's OWNER tenant
 
 
 class SnapshotPool:
@@ -143,12 +149,25 @@ class SnapshotPool:
         snap = self._by_key.pop(key, None)
         return snap.units if snap is not None else 0
 
-    def evict_lru(self) -> Optional[Snapshot]:
-        """Drop the least-recently-used snapshot (squeeze/cap path)."""
-        if not self._by_key:
-            return None
-        _, snap = self._by_key.popitem(last=False)
-        self.evictions += 1
+    def evict_lru(self, eligible: Optional[Callable[[Snapshot], bool]] = None
+                  ) -> Optional[Snapshot]:
+        """Drop the least-recently-used snapshot (squeeze/cap path).  With
+        an ``eligible`` predicate, drop the least-recent entry the
+        predicate admits — the broker passes its tenant-protection rule
+        here, so protected entries are skipped, not reordered."""
+        for key, snap in self._by_key.items():
+            if eligible is None or eligible(snap):
+                del self._by_key[key]
+                self.evictions += 1
+                return snap
+        return None
+
+    def evict(self, key: str) -> Optional[Snapshot]:
+        """Drop a specific entry as an *eviction* (counted, unlike
+        ``drop``): the broker's planned same-key/LRU eviction path."""
+        snap = self._by_key.pop(key, None)
+        if snap is not None:
+            self.evictions += 1
         return snap
 
     # ---------------------------------------------------------- invariants

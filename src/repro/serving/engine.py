@@ -48,7 +48,7 @@ from repro.configs.base import ModelConfig
 from repro.core.arena import ArenaSpec, ReclaimEvent
 from repro.core.elastic import ElasticArena, bucket_ladder, target_bucket
 from repro.models import model as M
-from repro.serving.request import Request, State
+from repro.serving.request import Request, State, slo_tier_of
 
 i32 = jnp.int32
 
@@ -236,7 +236,12 @@ class ServeEngine:
             if req.submit_s > self.now:
                 still.append(req)
                 continue
-            warm = self.warm.get(req.profile.name)
+            # batch-tier traffic is deliberately started cold: it must not
+            # consume a warm container or a pooled snapshot — both are the
+            # tight tier's tail-latency capacity (the slo_tiered policy's
+            # engine-side half; "standard" is the default and unchanged)
+            batch = slo_tier_of(req) == "batch"
+            warm = None if batch else self.warm.get(req.profile.name)
             if warm:
                 _, old_rid, row = warm.pop()
                 self._start_warm(req, old_rid, row)
@@ -254,7 +259,7 @@ class ServeEngine:
             # admissions, and a payload-less entry must not be
             # MRU-refreshed by a lookup it can never serve
             snap = self.broker.snapshot_lookup(req.profile.name) \
-                if self.mode == "hotmem" \
+                if self.mode == "hotmem" and not batch \
                 and self.broker.snapshot_restorable(req.profile.name) \
                 else None
             if snap is not None:

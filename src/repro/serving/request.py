@@ -28,6 +28,12 @@ class FunctionProfile:
     decode_tokens: int        # typical completion length
     max_tokens: int           # declared budget (partition size driver)
     weight: float = 1.0       # relative invocation rate
+    # multi-tenant / SLO-tier metadata (empty = single-tenant default /
+    # "standard" tier).  ``slo_tier`` is one of "tight" (latency-critical:
+    # spend warm/snapshot capacity here), "standard", "batch" (throughput
+    # traffic: routed cold, never spends cached warm state).
+    tenant: str = ""
+    slo_tier: str = "standard"
 
 
 # the four paper workloads, scaled to token budgets
@@ -56,7 +62,20 @@ class Request:
     admitted_s: Optional[float] = None
     first_token_s: Optional[float] = None
     done_s: Optional[float] = None
+    # per-request overrides; empty = inherit from the profile
+    tenant: str = ""
+    slo_tier: str = ""
 
     @property
     def latency(self) -> Optional[float]:
         return None if self.done_s is None else self.done_s - self.submit_s
+
+
+def tenant_of(req: Request) -> str:
+    """Effective tenant: request override > profile > '' (single-tenant)."""
+    return req.tenant or req.profile.tenant
+
+
+def slo_tier_of(req: Request) -> str:
+    """Effective SLO tier: request override > profile > 'standard'."""
+    return req.slo_tier or req.profile.slo_tier or "standard"

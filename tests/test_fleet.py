@@ -575,3 +575,38 @@ def test_fleet_remote_restore_end_to_end(setup):
     assert A.remote_restore_starts == 1 and A.restore_starts == 3
     assert [e for e in A.events if e.kind == "restore"][-1] \
         .detail["source"] == "local"
+
+
+def test_migration_preserves_tenant_attribution():
+    """A cross-host snapshot migration keeps the entry's OWNER tenant:
+    the source ledger credits and the destination ledger charges the
+    same tenant account, and the destination host's protection rule
+    covers the migrated entry exactly as a local capture."""
+    sched = FleetScheduler()
+    bA = HostMemoryBroker(8, async_reclaim=True, snapshot_pool_units=4,
+                          tenants={"a": 4, "b": 4}, clock=_fake_clock())
+    bB = HostMemoryBroker(8, async_reclaim=True, snapshot_pool_units=4,
+                          tenants={"a": 4, "b": 4}, clock=_fake_clock())
+    sched.add_host("h0", bA)
+    sched.add_host("h1", bB)
+    assert bB.snapshot_put("fn", units=2, payload=("kv", "fn"),
+                           nbytes=256, tenant="a")
+    assert bB.ledger.tenant_snapshot("a") == 2
+    sched.check_invariants()
+
+    rec = sched.ensure_local("fn", "h0")
+    assert rec is not None and rec.copy_seconds > 0
+    snap = bA.snapshots.peek("fn")
+    assert snap is not None and snap.tenant == "a"   # owner travelled
+    assert bA.ledger.tenant_snapshot("a") == 2
+    assert bB.ledger.tenant_snapshot("a") == 0
+    sched.check_invariants()
+
+    # on the destination, tenant b's pressure cannot squeeze it: a's
+    # usage there (2) is already below a's sub-budget (4)
+    bA.register("vb", 3, load=lambda: 0, tenant="b", mode="model")
+    g = bA.request_grant("vb", 5)                    # free 3 + deficit 2
+    assert g.granted == 3
+    assert bA.squeeze_log == []
+    assert bA.snapshots.peek("fn") is not None
+    sched.check_invariants()

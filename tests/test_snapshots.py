@@ -575,3 +575,87 @@ def test_recycle_idle_captures_once_per_profile(setup):
     assert len(snaps) == 1                     # one readout, not N
     assert broker.snapshots.inserts == 1
     assert not eng.warm["cnn"]
+
+
+# ----------------------------------- (d) tenant-fair squeeze protection
+
+
+def test_squeeze_respects_other_tenants_sub_budget():
+    """The fairness rule: one tenant's grant pressure may skim another
+    tenant's snapshot SURPLUS (usage above its sub-budget) but never
+    drop the owner below its sub-budget — the protected entries are
+    skipped and the deficit falls through to reclaim orders instead."""
+    from collections import deque
+    orders = deque()
+    broker = HostMemoryBroker(10, async_reclaim=True,
+                              snapshot_pool_units=5,
+                              tenants={"a": 5, "b": 5},
+                              clock=_fake_clock())
+    broker.register("vA", 3, load=lambda: 0, tenant="a",
+                    order_sink=orders.append, mode="model")
+    broker.register("vB", 2, load=lambda: 9, tenant="b", mode="model")
+    for k in ("a1", "a2", "a3"):
+        assert broker.snapshot_put(k, units=1, nbytes=64, replica_id="vA")
+    assert broker.ledger.tenant_usage("a") == 6     # 3 granted + 3 pooled
+    broker.check_invariants()
+
+    g = broker.request_grant("vB", 6)               # free 2 + deficit 4
+    # exactly ONE of a's entries was squeeze-eligible (usage 6 -> 5 ==
+    # sub-budget); the other two are protected, the rest went to orders
+    assert [r.tenant for r in broker.squeeze_log] == ["a"]
+    assert broker.snapshots.units == 2
+    assert broker.ledger.tenant_usage("a") == broker.ledger.sub_budgets["a"]
+    assert g.granted == 3                           # free 2 + squeezed 1
+    assert orders and sum(o.units for o in orders) == 3
+    broker.check_invariants()
+    broker.cancel_order(orders[0].order_id)
+
+    # the owner's OWN pressure drops its own entries freely
+    g2 = broker.request_grant("vA", 2)
+    assert g2.granted == 2
+    assert broker.snapshots.units == 0
+    assert [r.tenant for r in broker.squeeze_log] == ["a", "a", "a"]
+    broker.check_invariants()
+
+
+def test_snapshot_put_refuses_replacing_protected_entry():
+    """Same-key replacement is still a drop of the predecessor: tenant b
+    cannot overwrite tenant a's protected entry even when free units
+    would cover the new charge — room and put agree (both are the one
+    ``_evict_plan``), and nothing is mutated on refusal."""
+    broker = HostMemoryBroker(8, snapshot_pool_units=3,
+                              tenants={"a": 4, "b": 4},
+                              clock=_fake_clock())
+    assert broker.snapshot_put("k", units=1, nbytes=64, tenant="a")
+    assert not broker.snapshot_room("k", 1, tenant="b")
+    assert not broker.snapshot_put("k", units=1, nbytes=64, tenant="b")
+    assert broker.snapshots.peek("k").tenant == "a"  # untouched
+    # a fresh key needs no drop, so b inserts fine from the free pool
+    assert broker.snapshot_room("k2", 1, tenant="b")
+    assert broker.snapshot_put("k2", units=1, nbytes=64, tenant="b")
+    assert broker.ledger.tenant_snapshot("a") == 1
+    assert broker.ledger.tenant_snapshot("b") == 1
+    broker.check_invariants()
+
+
+def test_pool_evict_lru_eligible_skips_without_reordering():
+    """The predicate path: protected entries are skipped in place — the
+    survivor order is unchanged — and ``evict(key)`` drops a specific
+    entry counted as an eviction (unlike same-key ``drop``)."""
+    from repro.cluster.snapshots import Snapshot
+    pool = SnapshotPool()
+    for i, k in enumerate(("old", "mid", "new")):
+        pool.insert(Snapshot(key=k, units=1, tokens=0, nbytes=0,
+                             payload=None, replica_id="r",
+                             created_at=float(i), last_used=float(i)))
+    got = pool.evict_lru(eligible=lambda s: s.key != "old")
+    assert got is not None and got.key == "mid"      # LRU among eligible
+    assert pool.keys() == ["old", "new"]             # no reorder
+    assert pool.evict_lru(eligible=lambda s: False) is None
+    assert pool.keys() == ["old", "new"]
+    before = pool.evictions
+    got = pool.evict("new")
+    assert got is not None and got.key == "new"
+    assert pool.evictions == before + 1
+    assert pool.evict("gone") is None
+    assert pool.evictions == before + 1
