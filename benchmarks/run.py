@@ -14,13 +14,19 @@ Scenario mode — the SLO-tiered multi-tenant regression surface:
 
 Runs the ``repro.cluster.scenarios`` bank (deterministic ModelReplica
 fleet: no device ops, bit-identical rows for a fixed seed) and writes the
-rows to the baseline file (default ``benchmarks/BENCH_6.json``) under
-``--update-baseline``, or compares against the committed baseline under
-``--check``: any scenario missing from the new run fails, and any
-time-valued field (``TIME_FIELDS`` + the per-tier TTFT p99s) regressing
-more than 20% over baseline fails.  ``--smoke`` restricts to the smallest
-scenario per family (the fast-CI subset); ``--check`` always runs the
-full bank so the gate covers every committed row.
+rows to the baseline files under ``--update-baseline``, or compares
+against the committed baselines under ``--check``: any scenario missing
+from the new run fails, and any time-valued field (``TIME_FIELDS`` + the
+per-tier TTFT p99s) regressing more than 20% over baseline fails.
+``--smoke`` restricts to the smallest scenario per family (the fast-CI
+subset); ``--check`` always runs the full bank so the gate covers every
+committed row.
+
+Baselines are split by PR of origin so each file stays an append-only
+artifact: ``BENCH_6.json`` carries the single-device bank,
+``BENCH_7.json`` the mesh family (sharded hosts).  ``--check`` merges
+every committed file; ``--update-baseline`` rewrites each row into the
+file that owns its family.
 """
 from __future__ import annotations
 
@@ -31,6 +37,8 @@ import sys
 
 REGRESSION_SLACK = 1.2          # fail --check if new > old * this
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_6.json")
+MESH_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_7.json")
+MESH_FAMILIES = ("mesh",)       # families whose rows live in BENCH_7
 
 
 def _time_values(row: dict) -> dict:
@@ -47,6 +55,16 @@ def _time_values(row: dict) -> dict:
     return out
 
 
+def _baseline_files(args) -> list[str]:
+    """Every committed baseline the gate covers: the primary file plus
+    the mesh-family shard (skipped only if it was never written)."""
+    files = [args.baseline]
+    if os.path.abspath(args.baseline) == os.path.abspath(DEFAULT_BASELINE) \
+            and os.path.exists(MESH_BASELINE):
+        files.append(MESH_BASELINE)
+    return files
+
+
 def run_scenarios(args) -> int:
     from repro.cluster.scenarios import SMOKE, run_bank
 
@@ -58,15 +76,27 @@ def run_scenarios(args) -> int:
               f"killed={r['killed']} p99_by_tier={r['ttft_p99_ms_by_tier']}")
 
     if args.update_baseline:
-        with open(args.baseline, "w") as f:
-            json.dump(rows, f, indent=1, sort_keys=True)
-            f.write("\n")
-        print(f"baseline written: {args.baseline} ({len(rows)} scenarios)")
+        mesh = {n: r for n, r in rows.items()
+                if r["family"] in MESH_FAMILIES}
+        main_rows = {n: r for n, r in rows.items() if n not in mesh}
+        for path, part in ((args.baseline, main_rows),
+                           (MESH_BASELINE, mesh)):
+            if not part:
+                continue
+            with open(path, "w") as f:
+                json.dump(part, f, indent=1, sort_keys=True)
+                f.write("\n")
+            print(f"baseline written: {path} ({len(part)} scenarios)")
         return 0
 
     if args.check:
-        with open(args.baseline) as f:
-            base = json.load(f)
+        base = {}
+        for path in _baseline_files(args):
+            with open(path) as f:
+                part = json.load(f)
+            dup = set(base) & set(part)
+            assert not dup, f"scenario in two baseline files: {sorted(dup)}"
+            base.update(part)
         failures = []
         for name, old in sorted(base.items()):
             new = rows.get(name)

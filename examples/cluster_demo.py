@@ -30,15 +30,24 @@ pinned to A pulls those snapshots over (``mig`` column; modeled
 inter-host copy over real payload bytes), so A restores remotely
 (``remote`` column) instead of cold-prefilling.
 
+``--devices N`` gives every host an N-device mesh: each replica's KV
+stripes one shard per device, the broker arbitrates per-device budgets
+(reclaim orders drain one unit per shard in lockstep), and the table
+grows a per-device occupancy line per host (free/granted/snapshot units
+on every device — balanced throughout, which is the point).  Vanilla
+mode plugs single blocks, which cannot stripe, so ``--devices > 1``
+requires ``--modes hotmem``.
+
 ``--scenario NAME`` runs one entry of the multi-tenant scenario bank
 (``repro.cluster.scenarios``) instead of the engine demo and prints its
 report row — the same deterministic rows ``benchmarks/run.py
---scenarios`` gates against ``BENCH_6.json``.
+--scenarios`` gates against ``BENCH_6.json``/``BENCH_7.json``.
 
   PYTHONPATH=src python examples/cluster_demo.py
   PYTHONPATH=src python examples/cluster_demo.py \
       --policy snapshot_affinity --modes hotmem
   PYTHONPATH=src python examples/cluster_demo.py --hosts 2 --modes hotmem
+  PYTHONPATH=src python examples/cluster_demo.py --devices 2 --modes hotmem
   PYTHONPATH=src python examples/cluster_demo.py --scenario slo_tiered
 """
 import argparse
@@ -53,8 +62,8 @@ jax.config.update("jax_platform_name", "cpu")
 
 import numpy as np
 
-from repro.cluster import (ClusterSim, FleetScheduler, FleetSim,
-                           HostMemoryBroker, Router)
+from repro.cluster import (ClusterSim, DeviceTopology, FleetScheduler,
+                           FleetSim, HostMemoryBroker, Router)
 from repro.cluster.router import POLICIES
 from repro.configs.base import get_config, reduced
 from repro.core.arena import ArenaSpec
@@ -95,6 +104,11 @@ def main() -> None:
                     help="number of hosts; > 1 places replicas across "
                          "per-host brokers and enables cross-host "
                          "snapshot migration (FleetSim)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="devices per host: > 1 stripes every replica's "
+                         "KV one shard per device behind per-device "
+                         "broker budgets and prints per-device occupancy "
+                         "(hotmem only — vanilla cannot stripe)")
     ap.add_argument("--scenario", default=None,
                     help="run one scenario-bank entry (see "
                          "repro.cluster.scenarios.SCENARIOS) and print "
@@ -103,6 +117,10 @@ def main() -> None:
                     help="scenario seed (--scenario only)")
     args = ap.parse_args()
     assert args.hosts >= 1
+    assert args.devices >= 1
+    assert args.devices == 1 or "vanilla" not in args.modes.split(","), \
+        "--devices > 1 requires --modes without vanilla (single-block " \
+        "plugs cannot stripe over a mesh)"
 
     if args.scenario is not None:
         import json
@@ -141,11 +159,13 @@ def main() -> None:
             # host holds a full arena's budget (uncontended — the
             # cross-host traffic is snapshots, not steals).
             budget = (10 if args.hosts == 1 else 12) * bpp
+            topo = DeviceTopology.uniform(budget, args.devices) \
+                if args.devices > 1 else None
             sched = FleetScheduler()
             for k in range(args.hosts):
                 sched.add_host(f"h{k}", HostMemoryBroker(
                     budget_units=budget, async_reclaim=async_mode,
-                    snapshot_pool_units=pool_units))
+                    snapshot_pool_units=pool_units, topology=topo))
             start_units = min(2, spec.n_partitions) * bpp
             hosts_map = {h: {} for h in sched.brokers}
             for i, rid in enumerate(rids):
@@ -180,6 +200,16 @@ def main() -> None:
                   f"{m['remote_restore_starts']:6d} "
                   f"{m['snapshot_migrations']:4d} "
                   f"{sum(r['squeezed_units'] for r in reps):8d}")
+            if args.devices > 1:
+                # per-device occupancy: free/granted/snapshot units on
+                # every device of each host's mesh at end of run
+                for h, b in sorted(sched.brokers.items()):
+                    cols = b.ledger.device_report()
+                    occ = "  ".join(
+                        f"d{d}[free={c['free']} granted={c['granted']} "
+                        f"snap={c['snapshot']}]"
+                        for d, c in enumerate(cols))
+                    print(f"{'':17s} {h}: {occ}")
     print("\nThe broker reclaims the idle replica's memory for the loaded"
           "\none; HotMem makes that host-level steal zero-copy, the paged"
           "\nbaseline pays real migration bytes for the same elasticity —"

@@ -26,11 +26,13 @@ from repro.cluster.scenarios import (ROW_SCHEMA, SCENARIOS, SMOKE,
                                      ModelReplica, run_bank, run_scenario)
 from repro.cluster.sim import ClusterSim, FleetSim
 from repro.cluster.snapshots import Snapshot, SnapshotPool, SqueezeRecord
+from repro.cluster.topology import DeviceTopology
 
 __all__ = ["AlwaysGrantBroker", "BudgetLedger", "ClusterSim",
-           "DEFAULT_TENANT", "FleetSim", "FleetScheduler", "Grant",
-           "HedgedRoutePolicy", "HostMemoryBroker", "MemoryBroker",
-           "MigrationRecord", "ModelReplica", "ROW_SCHEMA", "ReclaimOrder",
-           "Router", "SCENARIOS", "SMOKE", "Snapshot", "SnapshotPool",
+           "DEFAULT_TENANT", "DeviceTopology", "FleetSim",
+           "FleetScheduler", "Grant", "HedgedRoutePolicy",
+           "HostMemoryBroker", "MemoryBroker", "MigrationRecord",
+           "ModelReplica", "ROW_SCHEMA", "ReclaimOrder", "Router",
+           "SCENARIOS", "SMOKE", "Snapshot", "SnapshotPool",
            "SqueezeRecord", "StealRecord", "TIME_FIELDS", "run_bank",
            "run_scenario"]

@@ -178,16 +178,22 @@ class FleetScheduler:
             return None                          # pressure: cold-start
         units, nbytes = snap.units, snap.nbytes
         payload, tokens = snap.payload, snap.tokens
+        fragments = snap.fragments
         # any transfer wall the source itself still owed compounds: a
-        # twice-migrated snapshot pays both hops at its first restore
-        copy_s = snap.copy_seconds + self.link_latency_s \
+        # twice-migrated snapshot pays both hops at its first restore.
+        # Sharded entries move one fragment per device — each fragment is
+        # its own transfer, so the fixed link latency is paid per
+        # fragment while the byte wall stays the total payload over the
+        # shared pipe (unsharded entries are the 1-fragment case).
+        n_frag = len(fragments) if fragments is not None else 1
+        copy_s = snap.copy_seconds + n_frag * self.link_latency_s \
             + nbytes / self.bandwidth_bytes_per_s
         src.snapshot_drop(key)                   # debit: src ledger credits
         ok = dst.snapshot_put(key, units=units, payload=payload,
                               tokens=tokens, nbytes=nbytes,
                               replica_id=snap.replica_id,
                               origin_host=src_host, copy_seconds=copy_s,
-                              tenant=snap.tenant)
+                              tenant=snap.tenant, fragments=fragments)
         assert ok, "room check promised space at the destination"
         rec = MigrationRecord(key=key, src=src_host, dst=dst_host,
                               units=units, nbytes=nbytes,

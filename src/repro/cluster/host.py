@@ -65,6 +65,13 @@ code path, so the fleet layer (``repro.cluster.fleet``) can run N hosts
 and assert per-host conservation after every fleet event — including
 cross-host snapshot migrations — without re-deriving the law anywhere.
 
+Sharded hosts (``topology=DeviceTopology(...)``, devices > 1): the ledger
+keeps one account column per device and every balanced flow stripes over
+the mesh; ``ReclaimOrder``s become **shard-coherent** — a victim's shards
+drain in lockstep, per-shard fills sit in ``Grant.incoherent`` escrow
+until every sibling shard catches up, and only coherent stripes are ever
+claimable.  ``devices=1`` is bit-identical to the pre-topology broker.
+
 Snapshot-squeeze-first reclaim rule: when a plug request outruns the free
 pool, the broker first drops LRU snapshots (``_squeeze_snapshots`` —
 metadata-only, zero migration, zero victim involvement) and only covers
@@ -94,6 +101,7 @@ from typing import Any, Callable, Optional
 from repro.core.arena import ReclaimEvent
 from repro.cluster.ledger import BudgetLedger
 from repro.cluster.snapshots import Snapshot, SnapshotPool, SqueezeRecord
+from repro.cluster.topology import DeviceTopology
 
 # victim-side reclaim callback: (k_units) -> (units_reclaimed, event|None)
 ReclaimFn = Callable[[int], tuple[int, Optional[ReclaimEvent]]]
@@ -119,15 +127,51 @@ class ReclaimOrder:
     """An asynchronous shrink request from host to victim VM.  The victim
     drains it incrementally at its own tick boundaries (``fulfill_order``)
     or lets natural releases cover it; an unfulfillable remainder is
-    canceled (``cancel_order``)."""
+    canceled (``cancel_order``).
+
+    Sharded victims (``shards > 1``: one KV shard per device of the host
+    mesh) drain **shard-coherently**: the order tracks per-shard fill and
+    cancel vectors, and only the *coherent* stripe — the minimum fill
+    across shards, times ``shards`` — ever becomes claimable by the
+    requesting grant.  A fill on one device may not unfence another
+    device's warm suffix: those units sit in ``Grant.incoherent`` escrow
+    until every sibling shard catches up (or the order closes and the
+    stranded remainder is unwound back to the free pool)."""
     order_id: int
     victim: str
     requester: str
-    units: int                   # blocks ordered
+    units: int                   # blocks ordered (all shards together)
     filled: int = 0              # blocks drained so far
     canceled: int = 0            # blocks the victim could not supply
     issued_at: float = 0.0       # broker-clock timestamp
     closed_at: Optional[float] = None
+    shards: int = 1              # device shards draining in lockstep
+    filled_by_shard: list[int] = dataclasses.field(default_factory=list)
+    canceled_by_shard: list[int] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        assert self.units % self.shards == 0, \
+            f"order of {self.units} units does not stripe over " \
+            f"{self.shards} shards"
+        if not self.filled_by_shard:
+            self.filled_by_shard = [0] * self.shards
+        if not self.canceled_by_shard:
+            self.canceled_by_shard = [0] * self.shards
+
+    @property
+    def per_shard(self) -> int:
+        """Each shard's slice of the order."""
+        return self.units // self.shards
+
+    def shard_remaining(self, shard: int) -> int:
+        return self.per_shard - self.filled_by_shard[shard] \
+            - self.canceled_by_shard[shard]
+
+    @property
+    def coherent_filled(self) -> int:
+        """Blocks filled on EVERY shard — the only part of the drain the
+        requester may claim (the minimum stripe, times shards)."""
+        return min(self.filled_by_shard) * self.shards
 
     @property
     def remaining(self) -> int:
@@ -147,8 +191,11 @@ class Grant:
     requested: int
     granted: int = 0             # filled from the free pool, already owned
     pending: int = 0             # owed by open reclaim orders
-    available: int = 0           # escrow: drained, awaiting claim
+    available: int = 0           # escrow: drained coherently, awaiting claim
     claimed: int = 0             # escrow already delivered
+    incoherent: int = 0          # escrow drained on SOME shards of an order
+    #                              only — unclaimable until the sibling
+    #                              shards catch up (sharded victims)
     order_ids: list[int] = dataclasses.field(default_factory=list)
     stall_seconds: float = 0.0   # sync mode: victim reclaim wall the
     #                              requester serialized behind (async: 0)
@@ -160,7 +207,8 @@ class Grant:
 
     @property
     def fulfilled(self) -> int:
-        return self.granted + self.claimed + self.available + self.pending
+        return self.granted + self.claimed + self.available \
+            + self.incoherent + self.pending
 
 
 class MemoryBroker:
@@ -205,7 +253,8 @@ class MemoryBroker:
     def snapshot_put(self, key: str, *, units: int, payload: Any = None,
                      tokens: int = 0, nbytes: int = 0,
                      replica_id: str = "", origin_host: str = "",
-                     copy_seconds: float = 0.0, tenant: str = "") -> bool:
+                     copy_seconds: float = 0.0, tenant: str = "",
+                     fragments: Any = None) -> bool:
         return False
 
     def snapshot_lookup(self, key: str) -> Optional[Snapshot]:
@@ -239,22 +288,28 @@ class HostMemoryBroker(MemoryBroker):
     """Fixed-budget host arbiter: grant on demand, reclaim-from-idlest
     under pressure — synchronously (legacy) or via async reclaim orders."""
 
-    def __init__(self, budget_units: int, *, async_reclaim: bool = False,
+    def __init__(self, budget_units: Optional[int] = None, *,
+                 async_reclaim: bool = False,
                  clock: Optional[Callable[[], float]] = None,
                  snapshot_pool_units: Optional[int] = None,
-                 tenants: Optional[dict[str, int]] = None):
+                 tenants: Optional[dict[str, int]] = None,
+                 topology: Optional[DeviceTopology] = None):
         # all unit accounts (free / granted / escrow / snapshot charge)
         # live in the ledger; the broker only orchestrates flows.
         # ``tenants``: optional per-tenant sub-budget split (must sum to
-        # the budget) — enables the fairness rule in _squeeze_snapshots
-        self.ledger = BudgetLedger(budget_units, tenants=tenants)
+        # the budget) — enables the fairness rule in _squeeze_snapshots.
+        # ``topology``: the device mesh this host exposes; omitted =
+        # single flat pool of ``budget_units`` (the exact legacy broker)
+        self.ledger = BudgetLedger(budget_units, tenants=tenants,
+                                   topology=topology)
+        self.topology = self.ledger.topology
         self.async_reclaim = async_reclaim
         self._clock = clock if clock is not None else time.perf_counter
         # host snapshot pool (None = disabled): warm-restart state charged
         # against this same budget, squeezed FIRST under pressure
         self.snapshots: Optional[SnapshotPool] = None
         if snapshot_pool_units is not None:
-            assert snapshot_pool_units <= budget_units
+            assert snapshot_pool_units <= self.ledger.budget_units
             self.snapshots = SnapshotPool(max_units=snapshot_pool_units)
         self.squeeze_log: list[SqueezeRecord] = []
         self._inline_reclaim = False     # sync steal in flight: pool fenced
@@ -298,13 +353,24 @@ class HostMemoryBroker(MemoryBroker):
                  load: Optional[Callable[[], int]] = None,
                  mode: Optional[str] = None,
                  order_sink: Optional[Callable[[ReclaimOrder], None]] = None,
-                 tenant: Optional[str] = None) -> None:
+                 tenant: Optional[str] = None,
+                 shards: Optional[int] = None) -> None:
         """VM boot: carve the replica's initial plug out of the free pool
         (squeezing snapshots first if the pool holds the needed slack —
         a booting VM outranks cached warm-restart state).  ``tenant``
         binds the replica to its sub-budget (required on multi-tenant
-        hosts; the squeeze respects other tenants' sub-budgets)."""
+        hosts; the squeeze respects other tenants' sub-budgets).
+        ``shards`` is the replica's shard spec: replicas span the full
+        mesh (one KV shard per device), so it must equal the topology's
+        device count — the broker validates rather than infers so a
+        mis-sharded replica fails at boot, not mid-reclaim."""
         assert replica_id not in self.granted, replica_id
+        n_dev = self.topology.n_devices
+        assert shards is None or shards == n_dev, \
+            f"{replica_id} declares {shards} shards on a {n_dev}-device " \
+            f"mesh: replicas span the full mesh"
+        self.topology.assert_balanced(initial_units,
+                                      f"boot plug for {replica_id}")
         tenant = self.ledger.resolve_tenant(tenant)
         if initial_units > self.free_units:
             self._squeeze_snapshots(initial_units - self.free_units,
@@ -341,6 +407,9 @@ class HostMemoryBroker(MemoryBroker):
         g = Grant(replica_id=replica_id, requested=max(want, 0))
         if want <= 0:
             return g
+        # plug requests stripe over the replica's shards, so they must be
+        # balanced over the mesh (trivially true on a 1-device topology)
+        self.topology.assert_balanced(want, f"plug request by {replica_id}")
         self.grant_calls += 1
         g.granted = self.ledger.take_free(replica_id, want)
         deficit = want - g.granted
@@ -385,7 +454,14 @@ class HostMemoryBroker(MemoryBroker):
             if units <= 0:
                 break
             o = self.orders[oid]
-            k = min(units, o.remaining)
+            # a natural release is balanced over the victim's shards, so
+            # it may only cover the order's balanced capacity (the
+            # scarcest shard bounds the stripe) — shards == 1 reduces to
+            # the plain ``min(units, o.remaining)``
+            k = min(units,
+                    min(o.shard_remaining(d) for d in range(o.shards))
+                    * o.shards)
+            k -= k % o.shards
             if k > 0:
                 self._apply_fill(o, k, wall=0.0, ev=None, natural=True)
                 units -= k
@@ -444,7 +520,10 @@ class HostMemoryBroker(MemoryBroker):
             freed += same.units
 
         def fits_now() -> bool:
-            return units <= self.free_units + freed and (
+            # a sharded snapshot charges one fragment per device, so the
+            # headroom that matters is the BALANCED free pool (scarcest
+            # device × devices) — identical to ``free_units`` at devices=1
+            return units <= self.ledger.balanced_free() + freed and (
                 pool.max_units is None
                 or pool.units - freed + units <= pool.max_units)
 
@@ -480,7 +559,8 @@ class HostMemoryBroker(MemoryBroker):
     def snapshot_put(self, key: str, *, units: int, payload: Any = None,
                      tokens: int = 0, nbytes: int = 0,
                      replica_id: str = "", origin_host: str = "",
-                     copy_seconds: float = 0.0, tenant: str = "") -> bool:
+                     copy_seconds: float = 0.0, tenant: str = "",
+                     fragments: Any = None) -> bool:
         """Persist a copied-out partition into the pool, charging ``units``
         against the free pool on the owner tenant's account.  A same-key
         predecessor is replaced; squeeze-eligible LRU entries are evicted
@@ -488,9 +568,15 @@ class HostMemoryBroker(MemoryBroker):
         cannot fit.  ``origin_host``/``copy_seconds`` mark a cross-host
         migration (``repro.cluster.fleet``): the modeled inter-host copy
         wall is paid by the first restore that uses the entry, so a remote
-        restore lands between a local restore and a cold prefill."""
+        restore lands between a local restore and a cold prefill.
+        ``fragments`` is the sharded-KV form: one payload fragment per
+        device; the entry is restorable only when every fragment is
+        present, and its charge stripes balanced over the mesh."""
         if self.snapshots is None:
             return False
+        if fragments is not None:
+            fragments = tuple(fragments)
+            assert units % len(fragments) == 0, (units, len(fragments))
         t = self._snap_tenant(tenant, replica_id)
         plan = self._evict_plan(key, units, t)
         if plan is None:
@@ -510,7 +596,8 @@ class HostMemoryBroker(MemoryBroker):
                              nbytes=nbytes, payload=payload,
                              replica_id=replica_id, created_at=now,
                              last_used=now, origin_host=origin_host,
-                             copy_seconds=copy_seconds, tenant=t))
+                             copy_seconds=copy_seconds, tenant=t,
+                             fragments=fragments))
         return True
 
     def snapshot_lookup(self, key: str) -> Optional[Snapshot]:
@@ -528,16 +615,18 @@ class HostMemoryBroker(MemoryBroker):
 
     def snapshot_restorable(self, key: str) -> bool:
         """Restore-feasibility probe (router + engine admission): the
-        entry must carry a payload to copy back.  Metadata-only entries
-        (non-engine producers: broker-level tests, benchmarks) are
-        *present* but not restorable — probing them here instead of via
-        ``snapshot_lookup`` keeps them off the hit counter and out of the
-        MRU slot, so dead entries stay first in squeeze order.  No recency
-        refresh, no accounting."""
+        entry must carry a payload to copy back — and, for sharded
+        entries, EVERY per-device fragment (a half-captured replica is
+        not a warm start).  Metadata-only entries (non-engine producers:
+        broker-level tests, benchmarks) are *present* but not restorable
+        — probing them here instead of via ``snapshot_lookup`` keeps
+        them off the hit counter and out of the MRU slot, so dead
+        entries stay first in squeeze order.  No recency refresh, no
+        accounting."""
         if self.snapshots is None:
             return False
         snap = self.snapshots.peek(key)
-        return snap is not None and snap.payload is not None
+        return snap is not None and snap.restorable
 
     def snapshot_drop(self, key: str) -> int:
         """Explicitly invalidate ``key`` (tests / staleness): its charge
@@ -591,7 +680,11 @@ class HostMemoryBroker(MemoryBroker):
                       ) -> int:
         """Spread ``deficit`` across reclaim orders to the idlest victims
         (fewest in-flight invocations), capped by what each victim holds
-        beyond units already ordered from it."""
+        beyond units already ordered from it.  On a multi-device mesh
+        each order stripes over the victim's shards, so per-victim
+        amounts are floored to the shard count (a 1-device mesh floors
+        nothing)."""
+        n_dev = self.topology.n_devices
         victims = sorted(
             (r for r in self.granted
              if r != requester and r in self._order_sink),
@@ -602,12 +695,13 @@ class HostMemoryBroker(MemoryBroker):
             if deficit <= 0:
                 break
             cap = self.granted[v] - self.open_order_units(v)
+            cap -= cap % n_dev
             k = min(deficit, cap)
             if k <= 0:
                 continue
             order = ReclaimOrder(order_id=self._next_order, victim=v,
                                  requester=requester, units=k,
-                                 issued_at=now)
+                                 issued_at=now, shards=n_dev)
             self._next_order += 1
             self.orders[order.order_id] = order
             self._victim_orders.setdefault(v, []).append(order.order_id)
@@ -619,12 +713,35 @@ class HostMemoryBroker(MemoryBroker):
         return issued
 
     def fulfill_order(self, order_id: int, units: int,
-                      ev: Optional[ReclaimEvent] = None) -> int:
+                      ev: Optional[ReclaimEvent] = None,
+                      shard: Optional[int] = None) -> int:
         """Victim-side partial drain: move up to ``units`` blocks from the
         victim's grant into the order's escrow.  Returns blocks accepted
-        (the victim releases any unplugged excess normally)."""
+        (the victim releases any unplugged excess normally).
+
+        ``shard=d`` drains one device shard of the order (sharded
+        victims call this once per device as each shard's suffix
+        unfences); ``shard=None`` is a balanced drain over every shard
+        at once — on a 1-shard order that is exactly the legacy call."""
         o = self.orders[order_id]
+        if shard is not None:
+            assert 0 <= shard < o.shards, (shard, o.shards)
+            k = min(units, o.shard_remaining(shard),
+                    self.ledger.granted_dev(o.victim)[shard])
+            if k <= 0:
+                return 0
+            self._apply_fill(o, k, wall=ev.wall_seconds if ev is not None
+                             else 0.0, ev=ev, natural=False, shard=shard)
+            return k
         k = min(units, o.remaining, self.granted[o.victim])
+        if o.shards > 1:
+            # balanced drain: the scarcest shard bounds the stripe, both
+            # order-side (shard_remaining) and victim-side (granted_dev)
+            k = min(k,
+                    min(o.shard_remaining(d) for d in range(o.shards))
+                    * o.shards,
+                    min(self.ledger.granted_dev(o.victim)) * o.shards)
+            k -= k % o.shards
         if k <= 0:
             return 0
         self._apply_fill(o, k, wall=ev.wall_seconds if ev is not None
@@ -632,12 +749,30 @@ class HostMemoryBroker(MemoryBroker):
         return k
 
     def _apply_fill(self, o: ReclaimOrder, k: int, *, wall: float,
-                    ev: Optional[ReclaimEvent], natural: bool) -> None:
+                    ev: Optional[ReclaimEvent], natural: bool,
+                    shard: Optional[int] = None) -> None:
+        """Move ``k`` drained blocks into the order's escrow and update
+        the grant's coherence split: only the stripe filled on EVERY
+        shard becomes ``available`` (claimable); the rest waits in
+        ``incoherent`` until sibling shards catch up.  1-shard orders
+        are always coherent, so the split degenerates to the legacy
+        ``available += k``."""
         g = self._order_grant[o.order_id]
-        self.ledger.escrow_fill(o.victim, k, requester=o.requester)
+        old_coherent = o.coherent_filled
+        if shard is None:
+            self.ledger.escrow_fill(o.victim, k, requester=o.requester)
+            per = k // o.shards
+            for d in range(o.shards):
+                o.filled_by_shard[d] += per
+        else:
+            self.ledger.escrow_fill(o.victim, k, requester=o.requester,
+                                    dev=shard)
+            o.filled_by_shard[shard] += k
         o.filled += k
+        delta_coherent = o.coherent_filled - old_coherent
         g.pending -= k
-        g.available += k
+        g.available += delta_coherent
+        g.incoherent += k - delta_coherent
         self.steal_log.append(StealRecord(
             requester=o.requester, victim=o.victim, units=k,
             wall_seconds=wall,
@@ -647,33 +782,70 @@ class HostMemoryBroker(MemoryBroker):
         if not o.open:
             self._close_order(o)
 
-    def cancel_order(self, order_id: int, units: Optional[int] = None
-                     ) -> int:
+    def cancel_order(self, order_id: int, units: Optional[int] = None,
+                     shard: Optional[int] = None) -> int:
         """Victim abandons (part of) an order it cannot fulfill — e.g. its
         arena is fully drained, or it finished naturally and released its
         memory before the order could be serviced.  The requester's pending
-        shrinks; it may re-request later.  Returns units canceled."""
+        shrinks; it may re-request later.  Returns units canceled.
+
+        ``shard=d`` cancels one device shard's remainder (its siblings
+        stay ordered); ``shard=None`` cancels across every shard.  A
+        cancel can strand already-drained sibling fills incoherent —
+        when the order closes, that stranded escrow is unwound back to
+        the free pool (``_close_order``), never silently leaked."""
         o = self.orders[order_id]
-        k = o.remaining if units is None else min(units, o.remaining)
-        if k <= 0:
-            return 0
         g = self._order_grant[o.order_id]
-        o.canceled += k
-        g.pending -= k
-        self.denied_units += k
+        n = 0
+        if shard is not None:
+            assert 0 <= shard < o.shards, (shard, o.shards)
+            n = o.shard_remaining(shard) if units is None \
+                else min(units, o.shard_remaining(shard))
+            o.canceled_by_shard[shard] += n
+        else:
+            want = o.remaining if units is None else min(units, o.remaining)
+            left = want
+            for d in range(o.shards):       # drain shard remainders in order
+                k = min(left, o.shard_remaining(d))
+                o.canceled_by_shard[d] += k
+                left -= k
+            n = want - left
+        if n <= 0:
+            return 0
+        o.canceled += n
+        g.pending -= n
+        self.denied_units += n
         if not o.open:
             self._close_order(o)
         self._prune_grant(g)
-        return k
+        return n
 
     def _close_order(self, o: ReclaimOrder) -> None:
         o.closed_at = self._clock()
         vlist = self._victim_orders.get(o.victim)
         if vlist and o.order_id in vlist:
             vlist.remove(o.order_id)
+        # shard-coherence settlement: fills that never got their sibling
+        # shards (the victim canceled those) are stranded — they can
+        # never become claimable, so unwind them escrow -> free on their
+        # exact devices and count them denied.  1-shard orders close with
+        # min == filled, so nothing is ever stranded on the legacy path.
+        if o.shards > 1:
+            g = self._order_grant[o.order_id]
+            floor = min(o.filled_by_shard)
+            for d in range(o.shards):
+                stranded = o.filled_by_shard[d] - floor
+                if stranded > 0:
+                    self.ledger.escrow_release(stranded,
+                                               requester=o.requester,
+                                               dev=d)
+                    g.incoherent -= stranded
+                    self.denied_units += stranded
+            self._prune_grant(g)
 
     def _prune_grant(self, g: Grant) -> None:
-        if g.done and g.available == 0 and g in self.grants:
+        if g.done and g.available == 0 and g.incoherent == 0 \
+                and g in self.grants:
             self.grants.remove(g)
 
     def abandon_grant(self, grant: Grant) -> int:
@@ -790,6 +962,7 @@ class HostMemoryBroker(MemoryBroker):
             "escrow_units": self.escrow_units(),
             "pressure": self.pressure(),
             "by_mode": by_mode,
+            "devices": self.ledger.device_report(),
             "snapshot_units": self.snapshot_units(),
             "snapshot_squeezes": len(self.squeeze_log),
             "squeezed_units": sum(r.units for r in self.squeeze_log),
@@ -805,7 +978,7 @@ class HostMemoryBroker(MemoryBroker):
         # pool structures agree with the ledger's accounts
         self.ledger.check()
         assert self.ledger.escrow_units \
-            == sum(g.available for g in self.grants), \
+            == sum(g.available + g.incoherent for g in self.grants), \
             "escrow not backed by open grants"
         assert self.ledger.snapshot_units == self.snapshot_units(), \
             "pool charge diverged from the ledger"
@@ -823,12 +996,36 @@ class HostMemoryBroker(MemoryBroker):
                     f"tenant {t} pool entries diverged from ledger account"
         for o in self.orders.values():
             assert 0 <= o.filled + o.canceled <= o.units, o
+            # the shard vectors ARE the order's state: their sums must
+            # match the scalar totals and no shard may exceed its slice
+            assert sum(o.filled_by_shard) == o.filled, o
+            assert sum(o.canceled_by_shard) == o.canceled, o
+            for d in range(o.shards):
+                assert 0 <= o.filled_by_shard[d] + o.canceled_by_shard[d] \
+                    <= o.per_shard, o
             if o.open:
                 assert o.order_id in self._victim_orders.get(o.victim, ()), o
         for g in self.grants:
             assert g.pending >= 0 and g.available >= 0, g
+            assert g.incoherent >= 0, g
             assert g.fulfilled <= g.requested, g
+            # LOUD shard-coherence law: once every backing order has
+            # closed, no incoherent escrow may remain — a fill that
+            # reached only some shards of a victim must have been either
+            # completed by its siblings or unwound at order close.  A
+            # grant stuck incoherent here means a drain path skewed
+            # shards silently (the sharded analogue of a row-skew bug).
+            if all(not self.orders[oid].open for oid in g.order_ids):
+                assert g.incoherent == 0, \
+                    f"shard-incoherent drain: grant for {g.replica_id} " \
+                    f"holds {g.incoherent} escrowed units that can never " \
+                    f"become claimable (orders all closed)"
         # every pending unit is backed by exactly one open order
         assert sum(g.pending for g in self.grants) \
             == sum(o.remaining for o in self.orders.values()), \
             "pending units not backed by open orders"
+        # incoherent escrow is exactly the open orders' uncovered stripes
+        assert sum(g.incoherent for g in self.grants) \
+            == sum(o.filled - o.coherent_filled
+                   for o in self.orders.values() if o.open), \
+            "incoherent escrow diverged from open orders' shard skew"

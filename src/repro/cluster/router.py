@@ -154,6 +154,16 @@ class Router:
             return self.fleet.broker_of(rid)
         return None
 
+    def device_headroom(self, rid: str) -> Optional[int]:
+        """Observability probe: the BALANCED free headroom of ``rid``'s
+        host (scarcest device × device count — what a sharded plug could
+        actually take).  Surfaced for reports and demos only; it is
+        deliberately NOT part of any routing key, so a ``devices=1``
+        topology replays every routing trace bit-identically."""
+        b = self._host_broker(rid)
+        led = getattr(b, "ledger", None) if b is not None else None
+        return led.balanced_free() if led is not None else None
+
     def _snapshot_restorable(self, profile_name: str) -> bool:
         """Host-wide probe (snapshot_affinity): does THE host's pool —
         or, fleet-wired, any host's — hold a restorable copy?"""

@@ -25,6 +25,11 @@ report row each — this module defines a bank of ``FleetSim`` scenarios:
   hedge       hedged_fleet                   a straggler host: hedged
                                              dispatch fires the backup on
                                              the other host
+  mesh        mesh_reclaim                   the scaledown workload on a
+                                             4-device host mesh: sharded
+                                             replicas, per-device budget
+                                             conservation, shard-coherent
+                                             reclaim-order drains
 
 Every scenario is a pure function of ``(name, seed)``: arrivals come
 from per-tenant ``tracegen`` streams (independent child rngs), replicas
@@ -52,6 +57,7 @@ from repro.cluster.fleet import FleetScheduler
 from repro.cluster.host import HostMemoryBroker
 from repro.cluster.router import Router
 from repro.cluster.sim import FleetSim
+from repro.cluster.topology import DeviceTopology
 from repro.launch.distributed import hedged_dispatch
 from repro.serving.request import (PROFILES, FunctionProfile, Request,
                                    State, slo_tier_of, tenant_of)
@@ -69,7 +75,7 @@ ROW_SCHEMA = (
     "warm_starts", "restore_starts", "remote_restore_starts",
     "cold_starts", "squeezes_by_tenant", "reclaim_orders", "order_units",
     "snapshot_migrations", "hedges", "routes", "host_seconds",
-    "free_units_end",
+    "free_units_end", "device_units_end",
 )
 
 # fields holding milliseconds/seconds — the CI regression gate treats
@@ -88,8 +94,12 @@ class ModelReplica:
     Interface-compatible with ``FleetSim``/``Router``: ``now`` /
     ``pending`` / ``active`` / ``warm`` / ``done`` / ``load()`` /
     ``host_work()`` / ``_tick()`` / ``metrics()`` plus the start-path
-    counters the sim metrics aggregate.  One memory unit backs one
-    request row."""
+    counters the sim metrics aggregate.  One request row is backed by
+    ``devices`` memory units — one KV shard per device of the host mesh
+    — so every broker flow is ``rows × devices`` units, order drains go
+    one unit per shard in lockstep, and snapshot entries carry one
+    fragment per device.  ``devices=1`` (one unit per row) is the exact
+    pre-mesh twin, bit-identical trace included."""
 
     DECODE_S = 1e-3              # one batched decode step
     COLD_S_TOK = 2e-4            # cold prefill, per prompt token
@@ -103,13 +113,18 @@ class ModelReplica:
 
     def __init__(self, rid: str, broker: HostMemoryBroker, host_id: str,
                  *, units: int, min_rows: int = 1,
-                 tenant: Optional[str] = None, straggle: float = 1.0):
+                 tenant: Optional[str] = None, straggle: float = 1.0,
+                 devices: int = 1):
         assert units >= min_rows >= 1
+        assert devices >= 1 and broker.topology.n_devices == devices, \
+            f"{rid}: {devices} KV shards on a " \
+            f"{broker.topology.n_devices}-device host"
         self.rid = rid
         self.broker = broker
         self.host = host_id
         self.tenant = tenant or ""
         self.straggle = straggle         # work-cost multiplier (hedge scn)
+        self.devices = devices           # units (KV shards) per row
         self.rows = units
         self.min_rows = min_rows
         self.now = 0.0
@@ -129,9 +144,9 @@ class ModelReplica:
         self._prof_tokens: dict[str, int] = {}
         self._orders: deque = deque()
         self._grants: list = []
-        broker.register(rid, units, load=self.load,
+        broker.register(rid, units * devices, load=self.load,
                         order_sink=self._orders.append, mode="model",
-                        tenant=tenant)
+                        tenant=tenant, shards=devices)
 
     # ----------------------------------------------------------- queries
     def load(self) -> int:
@@ -162,10 +177,11 @@ class ModelReplica:
         for g in list(self._grants):
             got = self.broker.claim_grant(g)
             if got:
-                self.rows += got
+                assert got % self.devices == 0, (got, self.devices)
+                self.rows += got // self.devices
             if not g.done and not (self.pending or self.active):
                 self.broker.abandon_grant(g)
-            if g.done and g.available == 0:
+            if g.done and g.available == 0 and g.incoherent == 0:
                 self._grants.remove(g)
         # victim side: serve one chunk of the front order per tick —
         # free rows first, then the oldest warm container; never shrink
@@ -179,8 +195,17 @@ class ModelReplica:
                 self._drop_oldest_warm()
             if self._free_rows() > 0 and self.rows > self.min_rows:
                 self.now += self.DRAIN_S * self.straggle
-                acc = self.broker.fulfill_order(o.order_id, 1)
-                self.rows -= acc
+                if self.devices == 1:
+                    acc = self.broker.fulfill_order(o.order_id, 1)
+                else:
+                    # one row per tick = one unit per shard, in lockstep
+                    # — the coherent stripe the requester can claim grows
+                    # by exactly one row once the LAST shard lands
+                    acc = sum(self.broker.fulfill_order(o.order_id, 1,
+                                                        shard=d)
+                              for d in range(self.devices))
+                assert acc % self.devices == 0, (acc, self.devices)
+                self.rows -= acc // self.devices
                 self.drains += 1
             else:
                 self.broker.cancel_order(o.order_id)
@@ -303,18 +328,23 @@ class ModelReplica:
                    + len(self.pending))
         release = self.rows - keep
         if release > 0:
-            self.broker.release_units(self.rid, release)
+            self.broker.release_units(self.rid, release * self.devices)
             self.rows -= release
 
     def _capture(self, prof: str) -> None:
         if self.broker.snapshot_available(prof):
             return
         toks = self._prof_tokens.get(prof, 0)
-        if self.broker.snapshot_put(prof, units=1, payload=("kv", prof),
+        # sharded KV: one fragment per device (all present — a partial
+        # capture would be unrestorable and is never offered to the pool)
+        frags = tuple(("kv", prof, d) for d in range(self.devices)) \
+            if self.devices > 1 else None
+        if self.broker.snapshot_put(prof, units=self.devices,
+                                    payload=("kv", prof),
                                     tokens=toks,
                                     nbytes=toks * self.BYTES_PER_TOKEN,
                                     replica_id=self.rid,
-                                    tenant=self.tenant):
+                                    tenant=self.tenant, fragments=frags):
             self.captures += 1
             self.now += self.CAPTURE_S * self.straggle
 
@@ -323,12 +353,16 @@ class ModelReplica:
         if self._orders:
             return                  # mid-drain: don't tug both directions
         ready = sum(1 for r in self.pending if r.submit_s <= self.now)
-        outstanding = sum(g.pending + g.available for g in self._grants)
-        want = ready - self._free_rows() - outstanding
+        # outstanding is in UNITS (incoherent shard fills included — they
+        # are still owed to us); demand is in rows
+        outstanding = sum(g.pending + g.available + g.incoherent
+                          for g in self._grants)
+        want = ready - self._free_rows() - outstanding // self.devices
         if want > 0:
-            g = self.broker.request_grant(self.rid, want)
-            self.rows += g.granted
-            if not g.done or g.available:
+            g = self.broker.request_grant(self.rid, want * self.devices)
+            assert g.granted % self.devices == 0, g
+            self.rows += g.granted // self.devices
+            if not g.done or g.available or g.incoherent:
                 self._grants.append(g)
 
     # ----------------------------------------------------------- metrics
@@ -391,20 +425,33 @@ def _requests(streams: list[tuple[str, list]]) -> list[Request]:
 def _build(hosts: dict[str, list], *, budget: int, pool_units: int,
            tenants: Optional[dict[str, int]] = None,
            policy: str = "drain_weighted", seed: int = 0,
-           route_fn: Optional[Callable] = None):
+           route_fn: Optional[Callable] = None, devices: int = 1):
     """One broker per host (shared tenant sub-budget split), replicas
     placed per spec, router wired to the fleet scheduler.  ``hosts``:
-    host id -> list of (rid, units, tenant, straggle, min_rows)."""
+    host id -> list of (rid, units, tenant, straggle, min_rows).
+
+    ``budget`` / ``pool_units`` / tenant sub-budgets are in ROWS; with
+    ``devices > 1`` every row is ``devices`` units (one KV shard per
+    device), so each host gets a uniform ``DeviceTopology`` of
+    ``budget × devices`` total units and all ledger flows stripe over
+    the mesh.  ``devices=1`` builds the exact legacy scalar broker."""
+    topo = None if devices == 1 \
+        else DeviceTopology.uniform(budget * devices, devices)
     sched = FleetScheduler()
     engines: dict[str, dict[str, ModelReplica]] = {}
     for h, reps in hosts.items():
-        b = HostMemoryBroker(budget, async_reclaim=True,
-                             snapshot_pool_units=pool_units,
-                             tenants=dict(tenants) if tenants else None)
+        b = HostMemoryBroker(
+            budget if devices == 1 else None, async_reclaim=True,
+            snapshot_pool_units=(pool_units * devices
+                                 if pool_units else pool_units),
+            tenants={t: v * devices for t, v in tenants.items()}
+            if tenants else None,
+            topology=topo)
         sched.add_host(h, b)
         engines[h] = {rid: ModelReplica(rid, b, h, units=units,
                                         tenant=tenant, straggle=straggle,
-                                        min_rows=min_rows)
+                                        min_rows=min_rows,
+                                        devices=devices)
                       for rid, units, tenant, straggle, min_rows in reps}
     router = Router(policy=policy, seed=seed, route_fn=route_fn,
                     fleet=sched)
@@ -456,6 +503,7 @@ def _row(name: str, family: str, seed: int, policy: str, sim: FleetSim,
     orders = 0
     order_units = 0
     free_end = {}
+    device_end = {}
     for h in sorted(sched.brokers):
         b = sched.brokers[h]
         b.check_invariants()       # full structural pass, end of run
@@ -464,6 +512,8 @@ def _row(name: str, family: str, seed: int, policy: str, sim: FleetSim,
         orders += len(b.orders)
         order_units += sum(o.units for o in b.orders.values())
         free_end[h] = b.free_units
+        device_end[h] = [b.ledger.free_dev(d)
+                         for d in range(b.ledger.n_devices)]
     row = {
         "scenario": name,
         "family": family,
@@ -492,6 +542,7 @@ def _row(name: str, family: str, seed: int, policy: str, sim: FleetSim,
         "routes": {r: m["routed"][r] for r in sorted(m["routed"])},
         "host_seconds": round(sim.virtual_now(), 9),
         "free_units_end": free_end,
+        "device_units_end": device_end,
     }
     assert tuple(row) == ROW_SCHEMA
     return row
@@ -609,6 +660,31 @@ def _scn_scaledown(name: str, seed: int) -> dict[str, Any]:
                 reqs)
 
 
+def _scn_mesh_reclaim(name: str, seed: int, *,
+                      devices: int = 4) -> dict[str, Any]:
+    """The scaledown workload on a ``devices``-device host mesh: every
+    replica's KV stripes one shard per device, grants/releases are
+    balanced unit vectors, reclaim orders drain one unit per shard in
+    lockstep (shard-coherent: the requester's claimable stripe grows
+    only when the LAST shard lands), and snapshot entries carry one
+    fragment per device.  Per-device conservation is checked by the
+    ledger after every tick; ``device_units_end`` pins the final
+    per-device free vectors in the baseline."""
+    profs = _tenant_profiles("app", ("cnn", "bfs", "html"))
+    hosts = {"h0": [("h0/r0", 3, None, 1.0, 1),
+                    ("h0/r1", 3, None, 1.0, 1)]}
+    sim, sched = _build(hosts, budget=10, pool_units=3,
+                        tenants=None, policy="drain_weighted", seed=seed,
+                        devices=devices)
+    arr = bursty_trace(2.0, 30.0, burst_x=5.0, burst_at=(0.0, 1.25),
+                       burst_len=0.35, quiet_after=1.7, seed=seed,
+                       stream="app")
+    reqs = _requests([("app", assign_profiles(arr, profs, seed=seed,
+                                              stream="app"))])
+    sim.run(list(reqs))
+    return _row(name, "mesh", seed, "drain_weighted", sim, sched, reqs)
+
+
 def _scn_hedged(name: str, seed: int) -> dict[str, Any]:
     """Two hosts, one a straggler (every virtual cost x40): hedged
     dispatch predicts the primary misses the deadline and fires the
@@ -647,11 +723,13 @@ SCENARIOS: dict[str, tuple[str, Callable[[int], dict[str, Any]]]] = {
     "scaledown_burst": ("scaledown", lambda s: _scn_scaledown(
         "scaledown_burst", s)),
     "hedged_fleet": ("hedge", lambda s: _scn_hedged("hedged_fleet", s)),
+    "mesh_reclaim": ("mesh", lambda s: _scn_mesh_reclaim(
+        "mesh_reclaim", s)),
 }
 
 # the smallest scenario per family — the CI fast tier's smoke set
 SMOKE = ("diurnal_smoke", "fairness_smoke", "slo_smoke",
-         "scaledown_burst", "hedged_fleet")
+         "scaledown_burst", "hedged_fleet", "mesh_reclaim")
 
 
 def run_scenario(name: str, seed: int = 0) -> dict[str, Any]:

@@ -202,6 +202,11 @@ class FleetSim:
             "remote_routes": self.router.remote_routes,
             "snapshot_migrations": len(self.scheduler.migrations)
             if self.scheduler is not None else 0,
+            # per-device occupancy surface (observability only: routing
+            # keys never read this, so devices=1 traces stay identical)
+            "device_occupancy": {h: b.ledger.device_report()
+                                 for h, b in self._brokers.items()
+                                 if hasattr(b, "ledger")},
         }
         by_tenant: dict[str, dict[str, int]] = {}
         for r in done:

@@ -54,6 +54,20 @@ class Snapshot:
     # rule protects another tenant's entries from being squeezed below
     # that tenant's sub-budget.
     tenant: str = ""
+    # sharded KV (devices > 1): one payload fragment per device shard.
+    # ``None`` = unsharded entry (the devices=1 layout); a sharded entry
+    # is restorable only when EVERY fragment is present — a half-captured
+    # replica is as useless as a half-drained one, so eviction and
+    # migration always move the whole entry atomically.
+    fragments: Optional[tuple] = None
+
+    @property
+    def restorable(self) -> bool:
+        """All state present to copy back: a payload, and — for sharded
+        entries — every per-device fragment."""
+        return self.payload is not None and (
+            self.fragments is None
+            or all(f is not None for f in self.fragments))
 
     def claim_copy(self) -> float:
         """Pay the pending inter-host copy: returns the owed wall once
@@ -174,6 +188,12 @@ class SnapshotPool:
     def check_invariants(self) -> None:
         assert all(s.units > 0 for s in self._by_key.values())
         assert all(s.key == k for k, s in self._by_key.items())
+        for s in self._by_key.values():
+            if s.fragments is not None:
+                assert len(s.fragments) >= 1 and \
+                    s.units % len(s.fragments) == 0, \
+                    f"{s.key}: {s.units} units over " \
+                    f"{len(s.fragments)} fragments"
         if self.max_units is not None:
             assert self.units <= self.max_units, \
                 f"pool holds {self.units} units over cap {self.max_units}"

@@ -18,3 +18,15 @@ def make_host_mesh():
     """Degenerate 1x1 mesh over local devices (tests / examples)."""
     n = jax.device_count()
     return jax.make_mesh((1, n), ("data", "model"))
+
+
+def make_host_topology(budget_per_device: int):
+    """The memory-control-plane view of THIS host's devices: a uniform
+    ``DeviceTopology`` with ``budget_per_device`` broker units (blocks)
+    of HBM budget on each local device.  Feed it to ``HostMemoryBroker``
+    so grants/reclaim/snapshots stripe over the real local mesh."""
+    from repro.cluster.topology import DeviceTopology
+
+    assert budget_per_device > 0
+    return DeviceTopology(budgets=(budget_per_device,)
+                          * jax.device_count())

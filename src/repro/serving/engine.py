@@ -114,10 +114,24 @@ class ServeEngine:
         self._open_grants: list[Grant] = []
         self.drain_parts_per_tick = 1
         self.broker = broker if broker is not None else AlwaysGrantBroker()
+        # sharded hosts: the replica's KV stripes one shard per device of
+        # the broker's mesh.  Partitions are the engine's native grow/
+        # shrink granule, so each partition must stripe evenly over the
+        # mesh — asserted at boot, not discovered mid-reclaim.
+        topo = getattr(self.broker, "topology", None)
+        self._n_dev = topo.n_devices if topo is not None else 1
+        if self._n_dev > 1:
+            assert spec.blocks_per_partition % self._n_dev == 0, \
+                f"partition of {spec.blocks_per_partition} blocks does " \
+                f"not stripe over {self._n_dev} devices"
+            # vanilla plugs/unplugs single blocks, which cannot stripe
+            assert mode != "vanilla", \
+                "vanilla mode is incompatible with a sharded host"
         self.broker.register(
             replica_id, start * spec.blocks_per_partition,
             reclaim=self.reclaim_for_broker, load=self.load, mode=mode,
-            order_sink=None if mode == "static" else self._enqueue_order)
+            order_sink=None if mode == "static" else self._enqueue_order,
+            shards=self._n_dev)
 
         self.now = 0.0
         self.pending: deque[Request] = deque()
@@ -506,8 +520,13 @@ class ServeEngine:
         bit-identical-trace regression depends on it staying identical).
         Returns native units actually added."""
         before = self.arena.units()
+        # absorb path: the claimed fill is a whole stripe (claim_grant only
+        # releases coherent units); hotmem's native unit is a partition,
+        # which stripes wholly, so only vanilla's block granules need the
+        # stripe check — and vanilla is asserted off for sharded hosts.
         wall = self.arena.plug(native) if via_gate \
-            else self.arena.absorb(native)
+            else self.arena.absorb(
+                native, shards=self._n_dev if self.mode == "vanilla" else 1)
         added = self.arena.units() - before
         if added:
             t0 = time.perf_counter()
@@ -616,7 +635,21 @@ class ServeEngine:
                     * self.spec.blocks_per_partition, order.remaining)
         freed, ev = self.reclaim_for_broker(chunk)
         if freed:
-            accepted = self.broker.fulfill_order(order.order_id, freed, ev)
+            shards = getattr(order, "shards", 1)
+            if shards > 1:
+                # sharded host: each freed partition stripes one slab per
+                # device, so the fill lands shard-by-shard (the broker only
+                # unfences the requester once every shard of the stripe is
+                # home — coherent_filled, not filled).
+                per = freed // shards
+                accepted = sum(
+                    self.broker.fulfill_order(order.order_id, per,
+                                              ev if d == 0 else None,
+                                              shard=d)
+                    for d in range(shards))
+            else:
+                accepted = self.broker.fulfill_order(order.order_id,
+                                                     freed, ev)
             if freed > accepted:         # rounding excess: normal release
                 self.broker.release_units(self.replica_id, freed - accepted)
             if not order.open:
@@ -649,7 +682,8 @@ class ServeEngine:
                                     detail={"async_fill": True})
             if abandon and not g.done:
                 self.broker.abandon_grant(g)
-            if g.done and g.available == 0:
+            if g.done and g.available == 0 \
+                    and getattr(g, "incoherent", 0) == 0:
                 self._open_grants.remove(g)
 
     def reclaim_for_broker(self, k_blocks: int

@@ -205,3 +205,21 @@ def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
 def named_sharding(axes: tuple[Optional[str], ...], shape: tuple[int, ...],
                    mesh: Mesh, rules: Rules) -> NamedSharding:
     return NamedSharding(mesh, spec_for(axes, shape, ShardCtx(mesh, rules)))
+
+
+# ---------------------------------------------------------------------------
+# Memory-control-plane view
+# ---------------------------------------------------------------------------
+
+
+def mesh_topology(mesh: Mesh, budget_per_device: int):
+    """The host broker's view of ``mesh``: a uniform ``DeviceTopology``
+    (``repro.cluster.topology``) with one account of
+    ``budget_per_device`` broker units per mesh device.  A replica whose
+    KV is sharded over this mesh holds one unit shard per device, so the
+    ledger's per-device conservation law tracks real per-chip HBM, not
+    one fictional flat pool."""
+    from repro.cluster.topology import DeviceTopology
+
+    assert budget_per_device > 0
+    return DeviceTopology(budgets=(budget_per_device,) * mesh.size)

@@ -382,6 +382,92 @@ def _seeded_tenant_ops(seed, n_ops, kinds):
             for _ in range(n_ops)]
 
 
+SNAP_ROOM_OP_KINDS = ("room_put", "request", "drain", "release", "claim",
+                      "cancel", "drop")
+
+
+def run_snapshot_room_put_ops(ops, devices=1, rows=12, pool_rows=5):
+    """``snapshot_room`` / ``snapshot_put`` agreement under interleaved
+    multi-tenant schedules on a ``devices``-wide host: whenever an engine
+    asks "would this snapshot fit?" and then immediately inserts it, the
+    two answers MUST coincide — room promising space that put then denies
+    would strand a paid copy-out; put succeeding where room said no would
+    skip captures the pool could hold.  The stream interleaves sharded
+    and fragment-less inserts (per-device striped charges), grants with
+    partial per-shard drains, releases, claims, cancels, and drops; the
+    conservation law is re-proved after every op."""
+    from repro.cluster import DeviceTopology
+
+    clock = itertools.count(1)
+    n = devices
+    budget = rows * n
+    tenants = {"t0": budget // 2, "t1": budget - budget // 2}
+    broker = HostMemoryBroker(
+        async_reclaim=True, clock=lambda: float(next(clock)),
+        snapshot_pool_units=pool_rows * n, tenants=tenants,
+        topology=DeviceTopology.uniform(budget, n))
+    rids = ["r_t0", "r_t1"]
+    tenant_of = dict(zip(rids, ("t0", "t1")))
+    order_q = {r: deque() for r in rids}
+    grants = {r: [] for r in rids}
+    for i, r in enumerate(rids):
+        broker.register(r, 2 * n, load=lambda i=i: i,
+                        order_sink=order_q[r].append, mode="hotmem",
+                        tenant=tenant_of[r], shards=n)
+    broker.check_invariants()
+
+    def front_open(r):
+        q = order_q[r]
+        while q and not q[0].open:
+            q.popleft()
+        return q[0] if q else None
+
+    agreements = 0
+    for kind, a, b in ops:
+        r = rids[a % len(rids)]
+        t = tenant_of[r]
+        if kind == "room_put":
+            key = f"k{b % 4}"
+            units = (1 + b % 3) * n
+            frags = tuple(("kv", key, d) for d in range(n)) \
+                if n > 1 and b % 2 else None
+            room = broker.snapshot_room(key, units, tenant=t)
+            ok = broker.snapshot_put(key, units=units,
+                                     payload=("kv", key), nbytes=64,
+                                     replica_id=r, tenant=t,
+                                     fragments=frags)
+            assert room == ok, \
+                f"room said {room} but put said {ok} for {key}"
+            agreements += 1
+        elif kind == "request":
+            g = broker.request_grant(r, (1 + b % 4) * n)
+            if not g.done or g.available:
+                grants[r].append(g)
+        elif kind == "drain":
+            o = front_open(r)
+            if o is not None:
+                if n == 1:
+                    broker.fulfill_order(o.order_id, 1 + b % 3)
+                else:                       # partial stripe: SOME shards
+                    for d in range(1 + b % n):
+                        broker.fulfill_order(o.order_id, 1, shard=d)
+        elif kind == "release":
+            cov = min(broker.ledger.granted_dev(r))
+            if cov:
+                broker.release_units(r, (1 + b % cov) * n)
+        elif kind == "claim":
+            for g in grants[r]:
+                broker.claim_grant(g)
+        elif kind == "cancel":
+            o = front_open(r)
+            if o is not None:
+                broker.cancel_order(o.order_id)
+        elif kind == "drop":
+            broker.snapshot_drop(f"k{b % 4}")
+        broker.check_invariants()           # conservation, every event
+    return broker, agreements
+
+
 # ------------------------------------------------- hypothesis (if present)
 
 try:
@@ -467,6 +553,17 @@ if HAVE_HYPOTHESIS:
     @given(TENANT_FLEET_OPS)
     def test_tenant_fleet_conservation(ops):
         run_tenant_fleet_ops(ops)
+
+    SNAP_ROOM_OPS = st.lists(
+        st.tuples(st.sampled_from(SNAP_ROOM_OP_KINDS),
+                  st.integers(0, 15), st.integers(0, 15)),
+        min_size=1, max_size=70,
+    )
+
+    @settings(max_examples=100, deadline=None)
+    @given(SNAP_ROOM_OPS, st.sampled_from([1, 2, 4]))
+    def test_snapshot_room_put_agreement(ops, devices):
+        run_snapshot_room_put_ops(ops, devices=devices)
 else:
     def test_hypothesis_missing_is_reported():
         """Collection must stay green without hypothesis; the seeded
@@ -510,6 +607,15 @@ def test_tenant_ledger_conservation_seeded(seed):
 def test_tenant_fleet_conservation_seeded(seed):
     run_tenant_fleet_ops(
         _seeded_tenant_ops(5000 + seed, 60, TENANT_FLEET_OP_KINDS))
+
+
+@pytest.mark.parametrize("seed", range(20))
+@pytest.mark.parametrize("devices", [1, 2, 4])
+def test_snapshot_room_put_agreement_seeded(seed, devices):
+    _, agreements = run_snapshot_room_put_ops(
+        _seeded_tenant_ops(6000 + seed, 70, SNAP_ROOM_OP_KINDS),
+        devices=devices)
+    assert agreements > 0                  # the property was exercised
 
 
 def test_tenant_ledger_scripted_flows_and_guards():

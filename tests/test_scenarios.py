@@ -35,6 +35,21 @@ from repro.serving.tracegen import (assign_profiles, bursty_trace,
 
 BASELINE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                         "BENCH_6.json")
+MESH_BASELINE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                             "BENCH_7.json")
+
+
+def _committed_baseline() -> dict:
+    """The full committed surface: BENCH_6 (single-device bank) merged
+    with BENCH_7 (the mesh family) — each scenario lives in exactly one
+    file."""
+    merged: dict = {}
+    for path in (BASELINE, MESH_BASELINE):
+        with open(path) as f:
+            part = json.load(f)
+        assert not set(merged) & set(part)
+        merged.update(part)
+    return merged
 
 
 # ------------------------------------------------------- (a) schema pin
@@ -51,7 +66,7 @@ def test_row_schema_is_pinned():
         "warm_starts", "restore_starts", "remote_restore_starts",
         "cold_starts", "squeezes_by_tenant", "reclaim_orders",
         "order_units", "snapshot_migrations", "hedges", "routes",
-        "host_seconds", "free_units_end",
+        "host_seconds", "free_units_end", "device_units_end",
     )
     assert set(TIME_FIELDS) < set(ROW_SCHEMA)
     assert set(SMOKE) < set(SCENARIOS)
@@ -81,12 +96,11 @@ def test_same_seed_rerun_is_bit_identical():
 
 
 def test_bank_reproduces_the_committed_baseline_exactly():
-    """BENCH_6.json is not a tolerance band here: the bank is virtual-
-    clocked end to end, so the committed rows are exactly reproducible.
-    A diff means behavior changed — refresh deliberately with
-    ``benchmarks/run.py --scenarios --update-baseline``."""
-    with open(BASELINE) as f:
-        baseline = json.load(f)
+    """The committed baselines are not a tolerance band here: the bank
+    is virtual-clocked end to end, so the committed rows are exactly
+    reproducible.  A diff means behavior changed — refresh deliberately
+    with ``benchmarks/run.py --scenarios --update-baseline``."""
+    baseline = _committed_baseline()
     rows = json.loads(json.dumps(run_bank(seed=0), sort_keys=True))
     assert sorted(rows) == sorted(baseline)
     for name in sorted(baseline):
@@ -197,6 +211,94 @@ def test_assign_profiles_stream_rng_is_per_stream():
     picks = rng.choice(len(names), size=len(arr), p=w)
     legacy = [p.name for _, p in assign_profiles(arr, profs, seed=0)]
     assert legacy == [names[i] for i in picks]
+
+
+# ------------------------------------------ (f) twin vs real-engine parity
+
+
+class _StepClock:
+    """Deterministic stand-in for ``time``: each ``perf_counter`` call
+    advances a fixed step, so the real engine's wall-measured virtual
+    costs are reproducible."""
+
+    def __init__(self, step=1e-4):
+        self._t = 0.0
+        self._step = step
+
+    def perf_counter(self):
+        self._t += self._step
+        return self._t
+
+
+@pytest.mark.slow
+def test_model_replica_twin_matches_real_engine(monkeypatch):
+    """The bank's credibility anchor: on a workload whose admission path
+    is unambiguous (widely spaced arrivals, keep-alive zero, no snapshot
+    pool — every start MUST be cold), the ``ModelReplica`` twin's row
+    counts equal a real ``ServeEngine`` fleet's exactly, and the twin's
+    fixed-virtual-cost cold TTFT lands within a wide tolerance band of
+    the deterministically clocked engine's."""
+    import jax
+
+    import repro.core.elastic as elastic_mod
+    import repro.core.hotmem as hotmem_mod
+    import repro.core.vanilla as vanilla_mod
+    import repro.serving.engine as engine_mod
+    from repro.cluster import ClusterSim, HostMemoryBroker, Router
+    from repro.cluster.scenarios import ModelReplica, _row
+    from repro.configs.base import get_config, reduced
+    from repro.core.arena import ArenaSpec
+    from repro.models import model as M
+    from repro.serving.engine import ServeEngine
+
+    def mk_reqs():
+        return [Request(rid=f"p{i}", profile=PROFILES["cnn"],
+                        submit_s=0.5 * i) for i in range(5)]
+
+    # --- twin: keep-alive zero so warm reuse is impossible in BOTH worlds
+    monkeypatch.setattr(ModelReplica, "KEEPALIVE_S", 0.0)
+    sim, sched = _build({"h0": [("h0/r0", 2, None, 1.0, 1)]}, budget=8,
+                        pool_units=None, tenants=None, seed=0)
+    twin_reqs = mk_reqs()
+    sim.run(list(twin_reqs))
+    row = _row("twin_parity", "scaledown", 0, "drain_weighted", sim,
+               sched, twin_reqs)
+
+    # --- real fleet: same workload (fresh Request objects — they mutate)
+    clock = _StepClock()
+    for mod in (engine_mod, elastic_mod, hotmem_mod, vanilla_mod):
+        monkeypatch.setattr(mod, "time", clock)
+    cfg = reduced(get_config("qwen2-7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    spec = ArenaSpec.from_model(cfg, partition_tokens=128,
+                                n_partitions=8, block_tokens=32)
+    broker = HostMemoryBroker(
+        budget_units=8 * spec.blocks_per_partition, async_reclaim=True)
+    eng = ServeEngine(cfg, params, spec, mode="hotmem", keep_alive=0.0,
+                      seed=0, broker=broker, replica_id="h0/r0",
+                      prewarm=False)
+    real_reqs = mk_reqs()
+    m = ClusterSim({"h0/r0": eng}, Router("least_loaded"), broker).run(
+        list(real_reqs), max_virtual_s=2000)
+    broker.check_invariants()
+
+    # counts: exactly equal, start path by start path
+    assert row["requests"] == len(real_reqs) == 5
+    assert (row["completed"], row["killed"]) \
+        == (m["completed"], m["killed"]) == (5, 0)
+    assert row["cold_starts"] == eng.cold_starts == 5
+    assert row["warm_starts"] == eng.warm_starts == 0
+    assert row["restore_starts"] == eng.restore_starts == 0
+    assert row["remote_restore_starts"] == eng.remote_restore_starts == 0
+
+    # times: modeled vs clocked cold TTFT within a wide (but unit-error-
+    # catching) band — the twin is a cost MODEL, not a profile
+    real_cold_ms = sorted(r.first_token_s - r.submit_s
+                          for r in eng.done)[2] * 1e3
+    assert row["cold_ttft_ms"] is not None and row["cold_ttft_ms"] > 0
+    assert real_cold_ms > 0
+    assert row["cold_ttft_ms"] / 100.0 <= real_cold_ms \
+        <= row["cold_ttft_ms"] * 100.0, (row["cold_ttft_ms"], real_cold_ms)
 
 
 def test_diurnal_trace_phase_shifts_the_peak():

@@ -1,0 +1,353 @@
+"""Sharded hosts: per-device HBM budgets through broker, ledger, reclaim,
+and snapshots.
+
+The tentpole contract under test, layer by layer:
+
+  * ``DeviceTopology`` — the mesh the memory control plane sees: one
+    budget column per device, balanced-flow divisibility asserted AT the
+    flow;
+  * ``BudgetLedger`` — per-device account vectors with the conservation
+    law ``free_d + granted_d + escrow_d + snapshot_d == budget_d`` per
+    device, proven in the same single ``check`` as the host-wide and
+    per-tenant laws;
+  * ``HostMemoryBroker`` — shard-coherent reclaim orders: a victim
+    drains one unit per shard in lockstep, a partial fill on one device
+    stays *incoherent* escrow the requester cannot claim (it may not
+    unfence anything), and an order closing with stranded shard fills
+    unwinds them to free — loudly asserted if a drain path ever skews
+    shards silently;
+  * ``SnapshotPool`` / ``FleetScheduler`` — sharded entries carry one
+    fragment per device, are restorable only when EVERY fragment is
+    present, evict atomically, and pay one link latency per fragment on
+    cross-host migration;
+  * ``devices=1`` is the exact legacy scalar plane, bit for bit.
+"""
+import itertools
+import random
+from collections import deque
+
+import pytest
+
+from repro.cluster import (BudgetLedger, DeviceTopology, HostMemoryBroker,
+                           FleetScheduler)
+from repro.cluster.scenarios import run_scenario
+
+
+def fake_clock():
+    c = itertools.count(1)
+    return lambda: float(next(c))
+
+
+def mk_mesh_broker(rows, devices, replicas, *, pool_rows=None):
+    """Uniform ``devices``-wide broker with ``rows`` rows of budget; each
+    replica spec is (rid, start_rows)."""
+    topo = DeviceTopology.uniform(rows * devices, devices)
+    broker = HostMemoryBroker(
+        async_reclaim=True, clock=fake_clock(),
+        snapshot_pool_units=pool_rows * devices if pool_rows else None,
+        topology=topo)
+    sinks = {}
+    for rid, start in replicas:
+        sinks[rid] = deque()
+        broker.register(rid, start * devices, load=lambda: 0,
+                        order_sink=sinks[rid].append, mode="hotmem",
+                        shards=devices)
+    return broker, sinks
+
+
+# ------------------------------------------------------------- topology
+
+
+def test_topology_constructors_and_guards():
+    t = DeviceTopology.uniform(24, 4)
+    assert t.n_devices == 4 and t.total_units == 24
+    assert t.budgets == (6, 6, 6, 6) and t.uniform_budget
+    assert t.assert_balanced(8, "test") == 2
+    s = DeviceTopology.single(7)
+    assert s.n_devices == 1 and s.assert_balanced(5, "x") == 5
+    with pytest.raises(AssertionError):
+        DeviceTopology.uniform(10, 4)            # not divisible
+    with pytest.raises(AssertionError):
+        t.assert_balanced(6, "unbalanced")       # 6 % 4 != 0
+    with pytest.raises(AssertionError):
+        DeviceTopology(budgets=())
+    rep = t.report()
+    assert rep["devices"] == 4 and rep["total_units"] == 24
+
+
+def test_broker_register_shards_must_span_the_mesh():
+    broker, _ = mk_mesh_broker(8, 4, [])
+    with pytest.raises(AssertionError):
+        broker.register("r", 4, shards=2)        # half-mesh replica
+    with pytest.raises(AssertionError):
+        broker.register("r", 6, shards=4)        # 6 units don't stripe
+    broker.register("r", 8, shards=4)
+    assert broker.ledger.granted_dev("r") == (2, 2, 2, 2)
+
+
+def test_balanced_flow_asserted_at_the_flow():
+    broker, _ = mk_mesh_broker(8, 4, [("r", 2)])
+    with pytest.raises(AssertionError):
+        broker.request_grant("r", 6)             # 6 % 4 != 0
+    with pytest.raises(AssertionError):
+        broker.release_units("r", 3)
+    g = broker.request_grant("r", 8)             # balanced: fine
+    assert g.granted == 8
+    broker.check_invariants()
+
+
+# ------------------------------------------- per-device conservation law
+
+
+@pytest.mark.parametrize("seed", range(10))
+@pytest.mark.parametrize("devices", [2, 4])
+def test_ledger_per_device_conservation_seeded(seed, devices):
+    """Random balanced + single-device flows: the per-device law (and its
+    host/tenant sums) hold after EVERY op, and the device report columns
+    always partition each device's budget."""
+    rng = random.Random(seed)
+    n = devices
+    led = BudgetLedger(topology=DeviceTopology.uniform(8 * n, n))
+    rids = ["a", "b"]
+    for r in rids:
+        led.carve(r, 2 * n)
+    led.check()
+    for _ in range(80):
+        r = rng.choice(rids)
+        kind = rng.choice(("take", "release", "escrow_in", "escrow_out",
+                           "shard_fill", "snap_charge", "snap_credit"))
+        if kind == "take":
+            got = led.take_free(r, rng.randint(0, 4) * n)
+            assert got % n == 0
+        elif kind == "release":
+            cov = min(led.granted_dev(r))
+            if cov:
+                led.release(r, rng.randint(1, cov) * n)
+        elif kind == "escrow_in":
+            cov = min(led.granted_dev(r))
+            if cov:
+                led.escrow_fill(r, rng.randint(1, cov) * n, requester=r)
+        elif kind == "escrow_out":
+            cov = min(e["escrow"] for e in led.device_report())
+            if cov:
+                led.escrow_claim(r, rng.randint(1, cov) * n)
+        elif kind == "shard_fill":
+            d = rng.randrange(n)
+            if led.granted_dev(r)[d]:
+                led.escrow_fill(r, 1, requester=r, dev=d)
+                led.escrow_release(1, requester=r, dev=d)
+        elif kind == "snap_charge":
+            cov = led.balanced_free()
+            if cov:
+                led.snapshot_charge(rng.randint(1, cov // n) * n)
+        elif kind == "snap_credit":
+            cov = min(e["snapshot"] for e in led.device_report())
+            if cov:
+                led.snapshot_credit(rng.randint(1, cov) * n)
+        led.check()
+        for d, col in enumerate(led.device_report()):
+            assert col["free"] + col["granted"] + col["escrow"] \
+                + col["snapshot"] == col["budget"] == 8, d
+
+
+def test_devices1_topology_is_the_exact_scalar_ledger():
+    """A 1-device topology must be arithmetically indistinguishable from
+    the legacy scalar ledger on any op stream (the bit-identity anchor
+    for every pre-mesh trace)."""
+    scalar = BudgetLedger(32)
+    mesh = BudgetLedger(topology=DeviceTopology.single(32))
+    rng = random.Random(0)
+    for led in (scalar, mesh):
+        led.carve("a", 5)
+        led.carve("b", 3)
+    for _ in range(120):
+        kind = rng.choice(("take", "release", "escrow_in", "escrow_out"))
+        r = rng.choice(("a", "b"))
+        amt = rng.randint(1, 6)
+        for led in (scalar, mesh):
+            if kind == "take":
+                led.take_free(r, amt)
+            elif kind == "release" and led.granted[r]:
+                led.release(r, 1 + (amt - 1) % led.granted[r])
+            elif kind == "escrow_in" and led.granted[r]:
+                led.escrow_fill(r, 1 + (amt - 1) % led.granted[r])
+            elif kind == "escrow_out" and led.escrow_units:
+                led.escrow_claim(r, 1 + (amt - 1) % led.escrow_units)
+            led.check()
+        assert scalar.granted == mesh.granted
+        assert scalar.free_units == mesh.free_units
+        assert scalar.escrow_units == mesh.escrow_units
+        assert mesh.balanced_free() == mesh.free_units
+
+
+# --------------------------------------------- shard-coherent reclaim
+
+
+def _pressured_mesh(devices=4):
+    """Victim holding almost the whole mesh + a requester whose grant
+    forces one reclaim order of exactly one row (one unit per shard)."""
+    broker, sinks = mk_mesh_broker(6, devices, [("v", 5), ("q", 0)])
+    g = broker.request_grant("q", 2 * devices)   # 1 row free, 1 row owed
+    assert g.granted == devices and g.pending == devices
+    (order,) = sinks["v"]
+    assert order.shards == devices and order.per_shard == 1
+    return broker, g, order
+
+
+def test_partial_shard_fill_stays_incoherent_and_unclaimable():
+    """Fills on SOME devices must not unfence the requester: the stripe
+    is claimable only once the LAST shard lands."""
+    broker, g, order = _pressured_mesh()
+    for d in range(3):
+        assert broker.fulfill_order(order.order_id, 1, shard=d) == 1
+        assert g.available == 0 and g.incoherent == d + 1
+        assert broker.claim_grant(g) == 0        # nothing unfenced
+        broker.check_invariants()
+    assert order.coherent_filled == 0 and order.open
+    assert broker.fulfill_order(order.order_id, 1, shard=3) == 1
+    assert g.incoherent == 0 and g.available == 4
+    assert not order.open                        # filled in lockstep
+    assert broker.claim_grant(g) == 4            # the whole stripe at once
+    assert broker.ledger.granted_dev("q") == (2, 2, 2, 2)
+    assert broker.ledger.granted_dev("v") == (4, 4, 4, 4)
+    broker.check_invariants()
+
+
+def test_overdrain_on_one_shard_is_clamped():
+    broker, g, order = _pressured_mesh()
+    assert broker.fulfill_order(order.order_id, 3, shard=0) == 1
+    assert broker.fulfill_order(order.order_id, 1, shard=0) == 0
+    broker.check_invariants()
+
+
+def test_cancel_unwinds_stranded_shard_fills_to_free():
+    """An order canceled after a partial stripe: the stranded fill cannot
+    ever become claimable, so close-time unwind returns it to the free
+    pool (on ITS device) and counts it denied."""
+    broker, g, order = _pressured_mesh()
+    assert broker.fulfill_order(order.order_id, 1, shard=0) == 1
+    denied0 = broker.denied_units
+    broker.cancel_order(order.order_id)
+    assert not order.open
+    assert g.incoherent == 0 and g.available == 0 and g.done
+    # shard 0's stranded unit went escrow -> free on device 0 alone
+    assert [broker.ledger.free_dev(d) for d in range(4)] == [1, 0, 0, 0]
+    assert broker.denied_units == denied0 + 3 + 1   # remainder + stranded
+    assert broker.claim_grant(g) == 0
+    broker.check_invariants()
+    broker.ledger.check()
+
+
+def test_loud_assert_on_shard_incoherent_close():
+    """Satellite regression: a drain path that closes an order while a
+    grant still holds incoherent escrow (some shards filled, siblings
+    canceled WITHOUT the close-time unwind) must trip ``check_invariants``
+    loudly — not leak the units silently."""
+    broker, g, order = _pressured_mesh()
+    assert broker.fulfill_order(order.order_id, 1, shard=0) == 1
+    assert g.incoherent == 1
+    # white-box: force-close the order behind the broker's back, the way
+    # a buggy driver would — scalar and vector cancels kept consistent so
+    # only the coherence law is violated
+    for d in range(order.shards):
+        rem = order.shard_remaining(d)
+        order.canceled_by_shard[d] += rem
+        order.canceled += rem
+    assert not order.open
+    with pytest.raises(AssertionError, match="shard-incoherent drain"):
+        broker.check_invariants()
+
+
+def test_natural_release_fills_whole_stripes_only():
+    """A victim's natural release routes into its open order in whole
+    stripes (floored to the shard multiple), never skewing shards."""
+    broker, g, order = _pressured_mesh()
+    broker.release_units("v", 4)                 # one row back
+    assert order.filled == 4 and not order.open
+    assert list(order.filled_by_shard) == [1, 1, 1, 1]
+    assert g.available == 4 and g.incoherent == 0
+    assert broker.claim_grant(g) == 4
+    broker.check_invariants()
+
+
+# ------------------------------------------------- sharded snapshots
+
+
+def test_sharded_snapshot_restorable_only_with_every_fragment():
+    broker, _ = mk_mesh_broker(6, 4, [("r", 2)], pool_rows=2)
+    frags = tuple(("kv", "f", d) for d in range(4))
+    assert broker.snapshot_put("whole", units=4, payload=("kv", "f"),
+                               nbytes=64, replica_id="r", fragments=frags)
+    assert broker.snapshot_restorable("whole")
+    # a missing fragment: present in the pool, NOT restorable
+    assert broker.snapshot_put("holey", units=4, payload=("kv", "g"),
+                               nbytes=64, replica_id="r",
+                               fragments=(("kv", "g", 0), None,
+                                          ("kv", "g", 2), ("kv", "g", 3)))
+    assert broker.snapshot_available("holey")
+    assert not broker.snapshot_restorable("holey")
+    broker.check_invariants()
+    # eviction is atomic: the whole striped charge returns at once
+    free_before = [broker.ledger.free_dev(d) for d in range(4)]
+    assert broker.snapshot_drop("whole") == 4
+    assert [broker.ledger.free_dev(d) for d in range(4)] \
+        == [f + 1 for f in free_before]
+    broker.check_invariants()
+
+
+def test_sharded_snapshot_charge_must_stripe():
+    broker, _ = mk_mesh_broker(6, 4, [("r", 2)], pool_rows=2)
+    with pytest.raises(AssertionError):
+        broker.snapshot_put("bad", units=6, payload=("kv", "x"),
+                            nbytes=64, replica_id="r",
+                            fragments=tuple(range(4)))   # 6 % 4 != 0
+
+
+def test_migration_pays_link_latency_per_fragment():
+    devices = 4
+    topo = DeviceTopology.uniform(6 * devices, devices)
+    sched = FleetScheduler(bandwidth_bytes_per_s=1e6, link_latency_s=1e-3)
+    for h in ("h0", "h1"):
+        sched.add_host(h, HostMemoryBroker(
+            async_reclaim=True, clock=fake_clock(),
+            snapshot_pool_units=2 * devices, topology=topo))
+    frags = tuple(("kv", "f", d) for d in range(devices))
+    assert sched.brokers["h0"].snapshot_put(
+        "sharded", units=devices, payload=("kv", "f"), nbytes=2000,
+        replica_id="r", fragments=frags)
+    rec = sched.migrate_snapshot("sharded", "h1")
+    assert rec is not None
+    # one latency per fragment + the byte wall over the shared pipe
+    assert rec.copy_seconds == pytest.approx(devices * 1e-3 + 2000 / 1e6)
+    assert sched.brokers["h1"].snapshot_restorable("sharded")
+    snap = sched.brokers["h1"].snapshots.peek("sharded")
+    assert snap.fragments == frags               # fragments travel intact
+    sched.check_invariants()
+    # the unsharded case pays exactly ONE latency
+    assert sched.brokers["h0"].snapshot_put(
+        "flat", units=devices, payload=("kv", "g"), nbytes=2000,
+        replica_id="r")
+    rec2 = sched.migrate_snapshot("flat", "h1")
+    assert rec2.copy_seconds == pytest.approx(1e-3 + 2000 / 1e6)
+
+
+# -------------------------------------------------- scenario-level pin
+
+
+def test_mesh_scenario_mirrors_the_scalar_scaledown_exactly():
+    """``mesh_reclaim`` is the scaledown workload with every row backed
+    by a 4-unit stripe: all counts and every virtual time must equal the
+    scalar scenario exactly (the whole schedule is devices-invariant),
+    unit totals scale by exactly 4, and the final per-device free
+    vectors are balanced."""
+    mesh = run_scenario("mesh_reclaim", seed=0)
+    scalar = run_scenario("scaledown_burst", seed=0)
+    for k in ("requests", "completed", "killed", "warm_starts",
+              "restore_starts", "remote_restore_starts", "cold_starts",
+              "reclaim_orders", "warm_ttft_ms", "restore_ttft_ms",
+              "cold_ttft_ms", "stall_p99_ms", "host_seconds", "routes"):
+        assert mesh[k] == scalar[k], k
+    assert mesh["order_units"] == scalar["order_units"] * 4
+    assert mesh["free_units_end"]["h0"] == scalar["free_units_end"]["h0"] * 4
+    (vec,) = mesh["device_units_end"].values()
+    assert len(vec) == 4 and len(set(vec)) == 1     # balanced at rest
