@@ -24,9 +24,10 @@ committed row.
 
 Baselines are split by PR of origin so each file stays an append-only
 artifact: ``BENCH_6.json`` carries the single-device bank,
-``BENCH_7.json`` the mesh family (sharded hosts).  ``--check`` merges
-every committed file; ``--update-baseline`` rewrites each row into the
-file that owns its family.
+``BENCH_7.json`` the mesh family (sharded hosts), ``BENCH_8.json`` the
+autoscale family (host lifecycle + drain-via-migration).  ``--check``
+merges every committed file; ``--update-baseline`` rewrites each row
+into the file that owns its family.
 """
 from __future__ import annotations
 
@@ -39,6 +40,9 @@ REGRESSION_SLACK = 1.2          # fail --check if new > old * this
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_6.json")
 MESH_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_7.json")
 MESH_FAMILIES = ("mesh",)       # families whose rows live in BENCH_7
+AUTOSCALE_BASELINE = os.path.join(os.path.dirname(__file__),
+                                  "BENCH_8.json")
+AUTOSCALE_FAMILIES = ("autoscale",)  # families whose rows live in BENCH_8
 
 
 def _time_values(row: dict) -> dict:
@@ -57,11 +61,12 @@ def _time_values(row: dict) -> dict:
 
 def _baseline_files(args) -> list[str]:
     """Every committed baseline the gate covers: the primary file plus
-    the mesh-family shard (skipped only if it was never written)."""
+    the per-family shards (each skipped only if it was never written)."""
     files = [args.baseline]
-    if os.path.abspath(args.baseline) == os.path.abspath(DEFAULT_BASELINE) \
-            and os.path.exists(MESH_BASELINE):
-        files.append(MESH_BASELINE)
+    if os.path.abspath(args.baseline) == os.path.abspath(DEFAULT_BASELINE):
+        for shard in (MESH_BASELINE, AUTOSCALE_BASELINE):
+            if os.path.exists(shard):
+                files.append(shard)
     return files
 
 
@@ -78,9 +83,13 @@ def run_scenarios(args) -> int:
     if args.update_baseline:
         mesh = {n: r for n, r in rows.items()
                 if r["family"] in MESH_FAMILIES}
-        main_rows = {n: r for n, r in rows.items() if n not in mesh}
+        autoscale = {n: r for n, r in rows.items()
+                     if r["family"] in AUTOSCALE_FAMILIES}
+        main_rows = {n: r for n, r in rows.items()
+                     if n not in mesh and n not in autoscale}
         for path, part in ((args.baseline, main_rows),
-                           (MESH_BASELINE, mesh)):
+                           (MESH_BASELINE, mesh),
+                           (AUTOSCALE_BASELINE, autoscale)):
             if not part:
                 continue
             with open(path, "w") as f:

@@ -41,7 +41,15 @@ requires ``--modes hotmem``.
 ``--scenario NAME`` runs one entry of the multi-tenant scenario bank
 (``repro.cluster.scenarios``) instead of the engine demo and prints its
 report row — the same deterministic rows ``benchmarks/run.py
---scenarios`` gates against ``BENCH_6.json``/``BENCH_7.json``.
+--scenarios`` gates against ``BENCH_6.json``/``BENCH_7.json``/
+``BENCH_8.json``.
+
+``--autoscale`` runs the host-lifecycle scenarios (the ``autoscale``
+family): a burst boots hosts through the low-water slack mark, the
+quiet tail retires the emptiest host, and retirement DRAINS the host's
+snapshot pool to peers over the contended interconnect instead of
+discarding it.  Prints a per-scenario lifecycle summary (boots,
+retires, migrations, TTFT).
 
   PYTHONPATH=src python examples/cluster_demo.py
   PYTHONPATH=src python examples/cluster_demo.py \
@@ -49,6 +57,7 @@ report row — the same deterministic rows ``benchmarks/run.py
   PYTHONPATH=src python examples/cluster_demo.py --hosts 2 --modes hotmem
   PYTHONPATH=src python examples/cluster_demo.py --devices 2 --modes hotmem
   PYTHONPATH=src python examples/cluster_demo.py --scenario slo_tiered
+  PYTHONPATH=src python examples/cluster_demo.py --autoscale
 """
 import argparse
 import os
@@ -113,14 +122,45 @@ def main() -> None:
                     help="run one scenario-bank entry (see "
                          "repro.cluster.scenarios.SCENARIOS) and print "
                          "its report row instead of the engine demo")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="run the host-lifecycle (autoscale family) "
+                         "scenarios and print a lifecycle summary "
+                         "instead of the engine demo")
     ap.add_argument("--seed", type=int, default=0,
-                    help="scenario seed (--scenario only)")
+                    help="scenario seed (--scenario/--autoscale only)")
     args = ap.parse_args()
     assert args.hosts >= 1
     assert args.devices >= 1
     assert args.devices == 1 or "vanilla" not in args.modes.split(","), \
         "--devices > 1 requires --modes without vanilla (single-block " \
         "plugs cannot stripe over a mesh)"
+
+    if args.autoscale:
+        from repro.cluster.scenarios import SCENARIOS, run_scenario
+        names = sorted(n for n, (fam, _) in SCENARIOS.items()
+                       if fam == "autoscale")
+        print(f"{'scenario':16s} {'reqs':>5s} {'hosts':>5s} {'boots':>5s} "
+              f"{'retires':>7s} {'mig':>4s} {'warm':>5s} {'restore':>7s} "
+              f"{'cold':>5s} {'host_s':>8s} {'p99_ms':>8s}")
+        for name in names:
+            row = run_scenario(name, seed=args.seed)
+            p99 = max(v for v in row["ttft_p99_ms_by_tier"].values())
+            print(f"{name:16s} {row['requests']:5d} {row['hosts']:5d} "
+                  f"{row['host_boots']:5d} {row['host_retires']:7d} "
+                  f"{row['snapshot_migrations']:4d} "
+                  f"{row['warm_starts']:5d} {row['restore_starts']:7d} "
+                  f"{row['cold_starts']:5d} {row['host_seconds']:8.3f} "
+                  f"{p99:8.2f}")
+        print("\nBursts eat the fleet's free-unit slack through the"
+              "\nlow-water mark, so the autoscaler boots hosts; the quiet"
+              "\ntail holds slack at the high-water mark until the"
+              "\nemptiest host retires.  A retiring host stops taking"
+              "\nroutes, drains its snapshot pool to peers over the"
+              "\ncontended interconnect (concurrent transfers sharing an"
+              "\nendpoint split its bandwidth), and is removed only once"
+              "\nits ledger shows every unit back home — warm state"
+              "\nsurvives scale-down instead of being discarded.")
+        return
 
     if args.scenario is not None:
         import json

@@ -16,7 +16,8 @@ owes to open reclaim orders.  ``repro.cluster.scenarios`` packages the
 whole stack into a bank of named, seeded, deterministic multi-tenant
 scenarios, each emitting one schema-stable report row (the regression
 surface ``benchmarks/run.py --scenarios`` tracks)."""
-from repro.cluster.fleet import FleetScheduler, MigrationRecord
+from repro.cluster.fleet import (AutoscalePolicy, FleetScheduler,
+                                 MigrationRecord)
 from repro.cluster.host import (AlwaysGrantBroker, Grant, HostMemoryBroker,
                                 MemoryBroker, ReclaimOrder, StealRecord)
 from repro.cluster.ledger import DEFAULT_TENANT, BudgetLedger
@@ -28,7 +29,8 @@ from repro.cluster.sim import ClusterSim, FleetSim
 from repro.cluster.snapshots import Snapshot, SnapshotPool, SqueezeRecord
 from repro.cluster.topology import DeviceTopology
 
-__all__ = ["AlwaysGrantBroker", "BudgetLedger", "ClusterSim",
+__all__ = ["AlwaysGrantBroker", "AutoscalePolicy", "BudgetLedger",
+           "ClusterSim",
            "DEFAULT_TENANT", "DeviceTopology", "FleetSim",
            "FleetScheduler", "Grant", "HedgedRoutePolicy",
            "HostMemoryBroker", "MemoryBroker", "MigrationRecord",

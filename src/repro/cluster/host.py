@@ -387,6 +387,33 @@ class HostMemoryBroker(MemoryBroker):
             self._order_sink[replica_id] = order_sink
         self._mode[replica_id] = mode
 
+    def deregister(self, replica_id: str) -> int:
+        """VM teardown (host retirement): settle every open flow the
+        replica participates in, return its whole holding to the free
+        pool, and forget its account.  Victim-side: open orders against
+        it are canceled (their requesters see the denial and may
+        re-request elsewhere).  Requester-side: its grants' unfilled
+        remainders are abandoned and already-coherent escrow is claimed
+        into the holding before the release — so nothing strands in
+        escrow and the ledger law holds through the teardown.  Returns
+        units returned to the pool."""
+        assert replica_id in self.granted, replica_id
+        for oid in list(self._victim_orders.get(replica_id, ())):
+            self.cancel_order(oid)
+        for g in [g for g in self.grants if g.replica_id == replica_id]:
+            self.abandon_grant(g)       # closes orders, unwinds incoherent
+            self.claim_grant(g)         # coherent escrow -> holding
+        units = self.granted[replica_id]
+        if units > 0:
+            self.ledger.release(replica_id, units)
+        self.ledger.forget(replica_id)
+        self._victim_orders.pop(replica_id, None)
+        self._reclaim.pop(replica_id, None)
+        self._load.pop(replica_id, None)
+        self._order_sink.pop(replica_id, None)
+        self._mode.pop(replica_id, None)
+        return units
+
     # --------------------------------------------------------- plug/unplug
     def request_units(self, replica_id: str, want: int) -> int:
         """Legacy blocking plug: grant up to ``want`` units now.  A legacy
@@ -644,6 +671,37 @@ class HostMemoryBroker(MemoryBroker):
     def snapshot_units(self) -> int:
         """The pool's current charge against the host budget."""
         return self.snapshots.units if self.snapshots is not None else 0
+
+    def squeezable_snapshot_units(self, tenant: Optional[str] = None) -> int:
+        """Units that pressure under ``tenant`` could squeeze out of the
+        pool RIGHT NOW — the placement-capacity probe (``FleetScheduler.
+        capacity`` must never promise units ``register`` cannot deliver).
+
+        Walks entries in LRU order simulating sequential drops exactly
+        like ``_squeeze_snapshots``: the fairness predicate is
+        re-evaluated against the post-drop owner usage, so two entries
+        whose owner can only spare one are counted once.  ``tenant=None``
+        resolves to the sole tenant on a single-tenant ledger; on a
+        multi-tenant ledger it is the *anonymous* probe — every entry is
+        treated as another tenant's (the conservative floor: a real
+        squeeze can only free more)."""
+        if self.snapshots is None:
+            return 0
+        led = self.ledger
+        if tenant or len(led.sub_budgets) == 1:
+            tenant = led.resolve_tenant(tenant)
+        usage: dict[str, int] = {}
+        freed = 0
+        for key in self.snapshots.keys():          # LRU -> MRU
+            snap = self.snapshots.peek(key)
+            owner = snap.tenant or led.resolve_tenant(None)
+            if owner != tenant:
+                u = usage.get(owner, led.tenant_usage(owner))
+                if u - snap.units < led.sub_budgets[owner]:
+                    continue                       # protected: skipped
+                usage[owner] = u - snap.units
+            freed += snap.units
+        return freed
 
     def _squeeze_snapshots(self, deficit: int, *, requester: str,
                            tenant: Optional[str] = None) -> int:

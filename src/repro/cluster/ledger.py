@@ -238,6 +238,19 @@ class BudgetLedger:
             self._free_dev[d] += per
         self.granted[replica_id] -= units
 
+    def forget(self, replica_id: str) -> None:
+        """VM teardown (host retirement): drop an emptied replica's
+        account.  The replica must have released its whole holding first
+        — forgetting a non-zero grant would leak units — so this only
+        removes the (all-zero) account rows and the tenant binding."""
+        assert replica_id in self.granted, replica_id
+        assert self.granted[replica_id] == 0, \
+            f"{replica_id} still holds {self.granted[replica_id]} units"
+        assert all(v == 0 for v in self._granted_dev[replica_id])
+        del self.granted[replica_id]
+        del self._granted_dev[replica_id]
+        del self.tenant_of[replica_id]
+
     # --------------------------------------------------------------- escrow
     def escrow_fill(self, victim: str, units: int, *,
                     requester: Optional[str] = None,

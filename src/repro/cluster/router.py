@@ -213,6 +213,20 @@ class Router:
             self.remote_routes += 1
         return rid
 
+    def _mask_lifecycle(self, engines: dict) -> dict:
+        """Drop replicas on retiring (or already-retired) hosts from the
+        candidate set — EVERY tier of every policy skips them, since a
+        retiring host accepts no new work.  Falls back to the full set if
+        the whole fleet is retiring (an arrival must route somewhere)."""
+        f = self.fleet
+        if f is None or not (getattr(f, "retiring", None)
+                             or getattr(f, "retired", None)):
+            return engines
+        live = {r: e for r, e in engines.items()
+                if (h := f.host_of(r)) is None
+                or (h in f.brokers and h not in f.retiring)}
+        return live or engines
+
     def route(self, req, engines: dict, backlog: Optional[dict] = None
               ) -> str:
         """Pick the replica for ``req``.  ``backlog`` counts routed-but-
@@ -221,6 +235,7 @@ class Router:
         if self.route_fn is not None:
             rid = self.route_fn(req, engines)
         else:
+            engines = self._mask_lifecycle(engines)
             rid = None
             if self.policy in ("warm_affinity", "snapshot_affinity"):
                 warm = [r for r, e in engines.items()
@@ -255,6 +270,12 @@ class Router:
                 ids = sorted(engines)
                 pair = ids if len(ids) <= 2 else self._rng.sample(ids, 2)
                 rid = self._pick(pair, engines, backlog)
+            if rid is None and self.policy == "snapshot_affinity":
+                # the cold fallback must honor the docstring's promise —
+                # "least-loaded among NON-DRAINING replicas": pure load
+                # order here used to land invocations on mid-reclaim
+                # victims exactly when nothing was cached
+                rid = self._pick(list(engines), engines, backlog)
             if rid is None:
                 rid = min(engines,
                           key=lambda r: self._score(r, engines, backlog))

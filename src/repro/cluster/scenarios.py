@@ -30,6 +30,14 @@ report row each — this module defines a bank of ``FleetSim`` scenarios:
                                              replicas, per-device budget
                                              conservation, shard-coherent
                                              reclaim-order drains
+  autoscale   autoscale_smoke,               burst -> quiet tail driving
+              autoscale_burst, retire_drain  the threshold autoscaler:
+                                             hosts boot below the low-
+                                             water slack mark, the
+                                             emptiest retires after a
+                                             quiet streak and DRAINS its
+                                             snapshot pool to peers over
+                                             the contended interconnect
 
 Every scenario is a pure function of ``(name, seed)``: arrivals come
 from per-tenant ``tracegen`` streams (independent child rngs), replicas
@@ -53,7 +61,7 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
-from repro.cluster.fleet import FleetScheduler
+from repro.cluster.fleet import AutoscalePolicy, FleetScheduler
 from repro.cluster.host import HostMemoryBroker
 from repro.cluster.router import Router
 from repro.cluster.sim import FleetSim
@@ -74,7 +82,8 @@ ROW_SCHEMA = (
     "ttft_p99_ms_by_tier", "stall_p99_ms",
     "warm_starts", "restore_starts", "remote_restore_starts",
     "cold_starts", "squeezes_by_tenant", "reclaim_orders", "order_units",
-    "snapshot_migrations", "hedges", "routes", "host_seconds",
+    "snapshot_migrations", "host_boots", "host_retires",
+    "hedges", "routes", "host_seconds",
     "free_units_end", "device_units_end",
 )
 
@@ -490,6 +499,8 @@ def _row(name: str, family: str, seed: int, policy: str, sim: FleetSim,
          sched: FleetScheduler, requests: list[Request],
          hedges: int = 0) -> dict[str, Any]:
     m = sim.metrics()
+    assert m["truncated"] is False, \
+        f"{name}: run exhausted max_ticks with work outstanding"
     samples = [s for e in sim.engines.values() for s in e.ttft_samples]
     waits = [w for e in sim.engines.values() for w in e.admit_waits]
 
@@ -504,8 +515,12 @@ def _row(name: str, family: str, seed: int, policy: str, sim: FleetSim,
     order_units = 0
     free_end = {}
     device_end = {}
-    for h in sorted(sched.brokers):
-        b = sched.brokers[h]
+    # retired hosts leave sched.brokers but their (emptied) brokers stay
+    # on the sim — fold them back in so squeeze/order accounting covers
+    # the whole run and conservation is visible end-to-end
+    brokers = {**getattr(sim, "_brokers", {}), **sched.brokers}
+    for h in sorted(brokers):
+        b = brokers[h]
         b.check_invariants()       # full structural pass, end of run
         for rec in b.squeeze_log:
             squeezes[rec.tenant] = squeezes.get(rec.tenant, 0) + 1
@@ -519,7 +534,7 @@ def _row(name: str, family: str, seed: int, policy: str, sim: FleetSim,
         "family": family,
         "seed": seed,
         "policy": policy,
-        "hosts": len(sched.brokers),
+        "hosts": len(brokers),
         "replicas": len(sim.engines),
         "tenants": sorted({tenant_of(r) or "default" for r in requests}),
         "requests": len(requests),
@@ -538,6 +553,8 @@ def _row(name: str, family: str, seed: int, policy: str, sim: FleetSim,
         "reclaim_orders": orders,
         "order_units": order_units,
         "snapshot_migrations": m["snapshot_migrations"],
+        "host_boots": sched.host_boots,
+        "host_retires": sched.host_retires,
         "hedges": hedges,
         "routes": {r: m["routed"][r] for r in sorted(m["routed"])},
         "host_seconds": round(sim.virtual_now(), 9),
@@ -705,6 +722,105 @@ def _scn_hedged(name: str, seed: int) -> dict[str, Any]:
     return row
 
 
+def _replica_factory(*, budget: int, pool_units: int, units: int,
+                     min_rows: int = 1,
+                     tenants: Optional[dict[str, int]] = None,
+                     tenant: Optional[str] = None) -> Callable:
+    """Host factory for the autoscaler: a fresh async broker with the
+    same budget/pool shape as the starting fleet, one replica registered
+    at construction.  ``clock`` is a frozen zero until the sim re-stamps
+    it with the host's virtual timebase — a boot never reads wall time,
+    so autoscaled runs stay bit-deterministic."""
+    def factory(host_id: str):
+        b = HostMemoryBroker(budget, async_reclaim=True,
+                             snapshot_pool_units=pool_units,
+                             tenants=dict(tenants) if tenants else None,
+                             clock=lambda: 0.0)
+        rid = f"{host_id}/r0"
+        return b, {rid: ModelReplica(rid, b, host_id, units=units,
+                                     min_rows=min_rows, tenant=tenant)}
+    return factory
+
+
+def _scn_autoscale(name: str, seed: int, *, duration_s: float,
+                   rate: float, burst_x: float, low_water: int,
+                   high_water: int, quiet_ticks: int,
+                   max_hosts: int) -> dict[str, Any]:
+    """One starting host under a burst: grant demand eats the fleet's
+    free-unit slack through the low-water mark, so the autoscaler boots
+    hosts (up to ``max_hosts``); the quiet tail releases rows back,
+    slack holds at/above the high-water mark for a sustained streak,
+    and the emptiest host retires — draining its captured snapshots to
+    the survivors over the contended interconnect."""
+    profs = _tenant_profiles("app", ("cnn", "html"))
+    hosts = {"h0": [("h0/r0", 2, None, 1.0, 1)]}
+    sim, sched = _build(hosts, budget=8, pool_units=3, tenants=None,
+                        policy="drain_weighted", seed=seed)
+    sim.set_autoscaler(
+        AutoscalePolicy(low_water=low_water, high_water=high_water,
+                        quiet_ticks=quiet_ticks, min_hosts=1,
+                        max_hosts=max_hosts),
+        _replica_factory(budget=8, pool_units=3, units=2))
+    arr = bursty_trace(duration_s, rate, burst_x=burst_x,
+                       burst_at=(duration_s * 0.1,),
+                       burst_len=duration_s * 0.4,
+                       quiet_after=duration_s * 0.7, seed=seed,
+                       stream="app")
+    reqs = _requests([("app", assign_profiles(arr, profs, seed=seed,
+                                              stream="app"))])
+    sim.run(list(reqs))
+    assert sched.host_boots >= 1, \
+        f"{name}: the burst never tripped the low-water mark"
+    return _row(name, "autoscale", seed, "drain_weighted", sim, sched,
+                reqs)
+
+
+def _scn_retire_drain(name: str, seed: int) -> dict[str, Any]:
+    """Drain-via-migration, deterministic by construction: every request
+    is pinned to h0 (whose replica holds 6 of 10 rows, so h0's free
+    units can never exceed 4), while idle h1 sits at a constant 6 free
+    units with two preseeded restorable snapshots the trace never
+    requests.  The quiet streak is therefore always accumulating, h1 is
+    PROVABLY the emptiest host when it trips, and h0 is guaranteed room
+    (>= 2 free units, pool 2 captures + 2 migrations <= cap 4).
+    Acceptance: h1 retires mid-run, every restorable entry it held
+    lands on h0 (migrated, NOT discarded), and per-host conservation
+    holds after every lifecycle event."""
+    tenants = {"app": 10}
+    profs = _tenant_profiles("app", ("cnn", "html"))
+    # preseed-only keys: profiles the trace never requests, so they sit
+    # untouched in h1's pool until the drain moves them
+    cold = _tenant_profiles("app", ("bfs", "bert"))
+    hosts = {"h0": [("h0/r0", 6, "app", 1.0, 6)],   # 6 pinned rows
+             "h1": [("h1/r0", 2, "app", 1.0, 1)]}
+    sim, sched = _build(hosts, budget=10, pool_units=4, tenants=tenants,
+                        policy="drain_weighted", seed=seed,
+                        route_fn=lambda req, engines: "h0/r0")
+    _preseed_snapshots(sched, cold, host="h1")
+    sim.set_autoscaler(
+        # low_water=0: slack can never go negative, so no boots — this
+        # scenario isolates the retire/drain half of the lifecycle;
+        # slack = h0 (2..4) + h1 (6) >= high_water always, so the streak
+        # trips at exactly eval ``quiet_ticks``
+        AutoscalePolicy(low_water=0, high_water=8, quiet_ticks=60,
+                        min_hosts=1, max_hosts=2),
+        _replica_factory(budget=10, pool_units=4, units=2,
+                         tenants=tenants, tenant="app"))
+    arr = bursty_trace(0.6, 50.0, burst_x=3.0, burst_at=(0.05,),
+                       burst_len=0.2, seed=seed, stream="app")
+    reqs = _requests([("app", assign_profiles(arr, profs, seed=seed,
+                                              stream="app"))])
+    sim.run(list(reqs))
+    assert sched.host_retires == 1 and "h1" in sched.retired, \
+        f"{name}: h1 did not retire (retired={sorted(sched.retired)})"
+    assert sched.drain_discarded == 0, \
+        f"{name}: drain discarded {sched.drain_discarded} snapshots"
+    for key in sorted(cold):
+        assert sched.brokers["h0"].snapshot_restorable(key), \
+            f"{name}: preseeded snapshot {key!r} was not migrated to h0"
+    return _row(name, "autoscale", seed, "pinned", sim, sched, reqs)
+
+
 # ------------------------------------------------------------- registry
 SCENARIOS: dict[str, tuple[str, Callable[[int], dict[str, Any]]]] = {
     "diurnal_smoke": ("diurnal", lambda s: _scn_diurnal(
@@ -725,11 +841,20 @@ SCENARIOS: dict[str, tuple[str, Callable[[int], dict[str, Any]]]] = {
     "hedged_fleet": ("hedge", lambda s: _scn_hedged("hedged_fleet", s)),
     "mesh_reclaim": ("mesh", lambda s: _scn_mesh_reclaim(
         "mesh_reclaim", s)),
+    "autoscale_smoke": ("autoscale", lambda s: _scn_autoscale(
+        "autoscale_smoke", s, duration_s=0.8, rate=100.0, burst_x=5.0,
+        low_water=4, high_water=12, quiet_ticks=60, max_hosts=3)),
+    "autoscale_burst": ("autoscale", lambda s: _scn_autoscale(
+        "autoscale_burst", s, duration_s=1.5, rate=140.0, burst_x=6.0,
+        low_water=4, high_water=12, quiet_ticks=60, max_hosts=3)),
+    "retire_drain": ("autoscale", lambda s: _scn_retire_drain(
+        "retire_drain", s)),
 }
 
 # the smallest scenario per family — the CI fast tier's smoke set
 SMOKE = ("diurnal_smoke", "fairness_smoke", "slo_smoke",
-         "scaledown_burst", "hedged_fleet", "mesh_reclaim")
+         "scaledown_burst", "hedged_fleet", "mesh_reclaim",
+         "autoscale_smoke")
 
 
 def run_scenario(name: str, seed: int = 0) -> dict[str, Any]:

@@ -36,11 +36,13 @@ requester's decode overlaps the victim's drain.
 """
 from __future__ import annotations
 
+import warnings
 from collections import deque
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import numpy as np
 
+from repro.cluster.fleet import AutoscalePolicy
 from repro.cluster.router import Router
 from repro.serving.request import State, slo_tier_of, tenant_of
 
@@ -94,6 +96,26 @@ class FleetSim:
             self.router.broker = self.broker
         if self.router.fleet is None and scheduler is not None:
             self.router.fleet = scheduler
+        # autoscaling (set_autoscaler): boot/retire hosts from the run loop
+        self._autoscale: Optional[AutoscalePolicy] = None
+        self._host_factory: Optional[Callable[[str], tuple]] = None
+        self._boot_seq = 0
+        self._quiet_evals = 0
+        self._decommissioned: set[str] = set()
+        self._todos: dict[str, deque] = {}
+        self._max_virtual_s = float("inf")
+        self._truncated = False
+
+    def set_autoscaler(self, policy: AutoscalePolicy,
+                       host_factory: Callable[[str], tuple]) -> None:
+        """Arm the threshold autoscaler: evaluated once per run-loop
+        iteration.  ``host_factory(host_id) -> (broker, {rid: engine})``
+        provisions a new host — its engines must already be registered
+        with the returned broker (the ``_build`` pattern); the sim wires
+        clocks, placements, and routing.  Requires a scheduler."""
+        assert self.scheduler is not None, "autoscaling needs a scheduler"
+        self._autoscale = policy
+        self._host_factory = host_factory
 
     # ------------------------------------------------------------- clocks
     def host_now(self, host_id: str) -> float:
@@ -112,18 +134,15 @@ class FleetSim:
     def run(self, requests: list, max_virtual_s: float = 1e9,
             max_ticks: int = 500_000) -> dict[str, Any]:
         arrivals = deque(sorted(requests, key=lambda r: r.submit_s))
-        todos = {rid: deque() for rid in self.engines}
+        self._todos = {rid: deque() for rid in self.engines}
+        self._max_virtual_s = max_virtual_s
+        todos = self._todos
         ticks = 0
-
-        def busy(rid: str) -> bool:
-            e = self.engines[rid]
-            host_work = getattr(e, "host_work", None)
-            return bool(todos[rid] or e.pending or e.active
-                        or any(e.warm.values())
-                        or (host_work is not None and host_work())) \
-                and e.now < max_virtual_s
+        busy = self._busy
 
         while ticks < max_ticks:
+            if self._autoscale is not None:
+                self._autoscale_step()
             busy_ids = [rid for rid in self.engines if busy(rid)]
             if arrivals:
                 t_arr = arrivals[0].submit_s
@@ -142,11 +161,117 @@ class FleetSim:
                 todos[target].append(req)
                 continue
             if not busy_ids:
+                if self._autoscale is not None:
+                    self._finalize_retirements()
                 break
             rid = min(busy_ids, key=lambda r: (self.engines[r].now, r))
             self.engines[rid]._tick(todos[rid])
             ticks += 1
+        # a run that exhausted ``max_ticks`` with work still queued is NOT
+        # a completed run — flag it loudly instead of returning metrics
+        # indistinguishable from a finished trace
+        self._truncated = bool(arrivals
+                               or any(busy(r) for r in self.engines))
+        if self._truncated:
+            warnings.warn(
+                f"FleetSim.run truncated at max_ticks={max_ticks}: "
+                f"{len(arrivals)} arrivals unrouted, "
+                f"{sum(busy(r) for r in self.engines)} replicas still "
+                f"busy — metrics are partial", RuntimeWarning,
+                stacklevel=2)
         return self.metrics()
+
+    def _busy(self, rid: str) -> bool:
+        e = self.engines[rid]
+        host_work = getattr(e, "host_work", None)
+        return bool(self._todos[rid] or e.pending or e.active
+                    or any(e.warm.values())
+                    or (host_work is not None and host_work())) \
+            and e.now < self._max_virtual_s
+
+    # ------------------------------------------------------- autoscaling
+    def _autoscale_step(self) -> None:
+        """One autoscaler evaluation (every run-loop iteration): pump
+        in-progress retirements, then apply the threshold policy to the
+        active fleet's free-unit slack — boot below the low-water mark,
+        begin retiring the emptiest host after a sustained quiet streak
+        at/above the high-water mark.  Purely a function of fleet state,
+        so a fixed (trace, seed) pair autoscales identically."""
+        sched, pol = self.scheduler, self._autoscale
+        self._pump_retiring(force=False)
+        active = [h for h in sched.brokers if h not in sched.retiring]
+        slack = sum(sched.brokers[h].free_units for h in active)
+        if slack < pol.low_water and len(active) < pol.max_hosts:
+            self._boot_host()
+            self._quiet_evals = 0
+            return
+        if slack >= pol.high_water:
+            self._quiet_evals += 1
+        else:
+            self._quiet_evals = 0
+        if self._quiet_evals >= pol.quiet_ticks \
+                and len(active) > pol.min_hosts:
+            # retire the emptiest DRIVEN host (most free units, tie -> id)
+            cands = [h for h in active if h in self.hosts]
+            if cands:
+                victim = min(cands,
+                             key=lambda h: (-sched.brokers[h].free_units, h))
+                sched.begin_retire(victim)
+            self._quiet_evals = 0
+
+    def _boot_host(self) -> None:
+        """Scale-up: provision a host via the factory and wire it into
+        the running sim (clock, todos, placements, routing)."""
+        sched = self.scheduler
+        hid = f"as{self._boot_seq}"
+        while hid in self.hosts or hid in sched.brokers \
+                or hid in sched.retired:
+            self._boot_seq += 1
+            hid = f"as{self._boot_seq}"
+        broker, engines = self._host_factory(hid)
+        assert engines, f"host factory produced no replicas for {hid}"
+        sched.boot_host(hid, broker)
+        self.hosts[hid] = dict(engines)
+        self._brokers[hid] = broker
+        if hasattr(broker, "set_clock"):
+            broker.set_clock(lambda h=hid: self.host_now(h))
+        for rid, e in engines.items():
+            assert rid not in self.engines, \
+                f"replica id {rid} already exists in the fleet"
+            self.engines[rid] = e
+            self._host_of[rid] = hid
+            self._todos[rid] = deque()
+            sched.placements[rid] = hid
+        sched.check_invariants()
+
+    def _pump_retiring(self, *, force: bool) -> None:
+        """Advance retirements of driven hosts: once a retiring host's
+        replicas are all idle, decommission them (``deregister`` settles
+        grants/orders and returns their units), drain the snapshot pool
+        to peers, and remove the host when its ledger is clean.  The
+        host's engines stay in ``self.engines`` forever — the fleet
+        clock is the sum of engine clocks, so removing one would jump
+        time backwards; the router masks them via the scheduler."""
+        sched = self.scheduler
+        for h in sorted(sched.retiring & set(self.hosts)
+                        - self._decommissioned):
+            if any(self._busy(r) for r in self.hosts[h]):
+                continue
+            b = sched.brokers[h]
+            for rid in sorted(self.hosts[h]):
+                if rid in b.granted:
+                    b.deregister(rid)
+            sched.drain_host(h, force=force)
+            if sched.finish_retire(h):
+                self._decommissioned.add(h)
+
+    def _finalize_retirements(self) -> None:
+        """End-of-trace pass: no arrivals and nothing busy, so complete
+        every in-progress retirement deterministically — the drain
+        budget protects foreground traffic that no longer exists, so the
+        force pump ignores it (and drops entries with no peer room
+        rather than stranding the retirement forever)."""
+        self._pump_retiring(force=True)
 
     def _localize_snapshot(self, req, target: str) -> None:
         """Fleet migration hook, at route time: if the chosen replica's
@@ -164,8 +289,12 @@ class FleetSim:
             return
         if self.engines[target].warm.get(req.profile.name):
             return
-        self.scheduler.ensure_local(req.profile.name,
-                                    self._host_of[target])
+        host = self._host_of[target]
+        # a retiring host is draining its pool — don't migrate INTO it
+        # (the router only lands here when the whole fleet is retiring)
+        if host in getattr(self.scheduler, "retiring", ()):
+            return
+        self.scheduler.ensure_local(req.profile.name, host)
 
     # -------------------------------------------------------------- metrics
     def metrics(self) -> dict[str, Any]:
@@ -177,6 +306,7 @@ class FleetSim:
         out: dict[str, Any] = {
             "completed": sum(r.state is State.DONE for r in done),
             "killed": sum(r.state is State.KILLED for r in done),
+            "truncated": self._truncated,
             "latency_p50": float(np.percentile(lat, 50)) if lat else None,
             # a 1-sample "percentile" is just that sample — meaningless as
             # a tail statistic, so report None until there are >= 2

@@ -164,7 +164,11 @@ def test_migration_refused_without_source_or_room():
 
 def test_migration_compounds_unpaid_copy_walls():
     """A snapshot migrated twice without a restore in between owes BOTH
-    hops at its first restore (the transfer wall never silently drops)."""
+    hops at its first restore (the transfer wall never silently drops) —
+    and the second hop CONTENDS with the first: hop1 (h0->h1, started at
+    clock 1.0, in flight until 1.0 + 1.25) still occupies h1's NIC when
+    hop2 (h1->h2) starts at clock 2.0, so hop2's byte wall sees half the
+    pipe."""
     sched = _mk_fleet({"h0": 8, "h1": 8, "h2": 8}, pool_units=4,
                       bandwidth=1024.0, latency=0.25)
     for h in ("h0", "h1", "h2"):
@@ -176,7 +180,8 @@ def test_migration_compounds_unpaid_copy_walls():
     hop2 = sched.migrate_snapshot("cnn", "h2")
     sched.check_invariants()
     assert hop1.copy_seconds == pytest.approx(0.25 + 1.0)
-    assert hop2.copy_seconds == pytest.approx(2 * (0.25 + 1.0))
+    assert hop2.copy_seconds == pytest.approx((0.25 + 1.0)      # hop1 owed
+                                              + 0.25 + 2 * 1.0)
     snap = sched.brokers["h2"].snapshots.peek("cnn")
     assert snap.origin_host == "h1"
     assert snap.claim_copy() == pytest.approx(hop2.copy_seconds)

@@ -1,0 +1,345 @@
+"""Host lifecycle on the fleet: boot/retire with drain-via-migration,
+the contended interconnect, the migration budget — and the capacity /
+routing / truncation bugs the autoscaler exposed.
+
+The properties pinned down:
+
+  (a) placement capacity honesty: ``FleetScheduler.capacity`` counts
+      only the snapshot charge a boot-time squeeze could ACTUALLY drop
+      under the tenant-fairness rule — summing the whole pool charge
+      promised capacity ``register`` then failed to deliver when the
+      pool was full of sub-budget-protected entries;
+  (b) retirement: a retiring host accepts no placements, the router
+      masks its replicas in every tier, its pool DRAINS to peers via
+      ``migrate_snapshot`` (restorable entries move; metadata-only ones
+      drop; roomless ones defer until force), and the host is removed
+      only once its ledger shows ``free == budget`` — with per-host
+      conservation checked after every lifecycle event;
+  (c) the interconnect is honest: concurrent transfers sharing an
+      endpoint split its bandwidth (two concurrent migrations pay 2x
+      the byte wall of one; disjoint endpoint pairs don't contend), and
+      ``migration_budget_bytes`` defers drain traffic while foreground
+      ``ensure_local`` restores always proceed;
+  (d) ``snapshot_affinity``'s cold fallback routes through ``_pick``
+      (least-loaded among NON-draining replicas, ``drain_avoided``
+      counted) instead of pure load order landing on mid-reclaim
+      victims exactly when nothing was cached;
+  (e) a ``FleetSim.run`` that exhausts ``max_ticks`` warns loudly and
+      flags ``metrics()["truncated"]`` instead of returning partial
+      metrics indistinguishable from a finished trace;
+  (f) autoscaled scenario rows (boot + retire mid-run) replay
+      bit-identically for a fixed seed.
+"""
+import json
+
+import pytest
+
+from repro.cluster import (FleetScheduler, FleetSim, HostMemoryBroker,
+                           Router)
+from repro.cluster.fleet import AutoscalePolicy
+from repro.serving.request import PROFILES, Request
+
+from conftest import StubReplica, fake_clock as _fake_clock, \
+    mk_async_broker as _mk_async
+
+
+def _fleet(budgets, *, pool_units=None, bandwidth=1024.0, latency=0.5,
+           budget_bytes=None):
+    """Fleet of sync brokers on fake clocks (1.0 per reading, separate
+    instance per component); bandwidth in bytes/virtual-second so
+    modeled copy walls are exact small numbers."""
+    sched = FleetScheduler(bandwidth_bytes_per_s=bandwidth,
+                           link_latency_s=latency,
+                           migration_budget_bytes=budget_bytes,
+                           clock=_fake_clock())
+    for h, b in budgets.items():
+        sched.add_host(h, HostMemoryBroker(
+            b, clock=_fake_clock(), snapshot_pool_units=pool_units))
+    return sched
+
+
+class _FakeEngine:
+    def __init__(self, load, warm=()):
+        self._load = load
+        self.warm = {name: [(0.0, "rid", 0)] for name in warm}
+
+    def load(self):
+        return self._load
+
+
+def _req(profile="cnn"):
+    return Request(rid="x", profile=PROFILES[profile], submit_s=0.0)
+
+
+# ------------------------------------------------- (a) capacity honesty
+
+
+def test_capacity_excludes_protected_snapshot_charge():
+    """The placement bug: a pool full of another tenant's entries at its
+    sub-budget contributes ZERO boot-squeeze capacity, so ``place`` no
+    longer promises units ``register`` cannot deliver."""
+    def mk(budget=8):
+        return HostMemoryBroker(budget, clock=_fake_clock(),
+                                snapshot_pool_units=4,
+                                tenants={"a": 4, "b": 4})
+    b0 = mk()
+    for i in range(4):
+        assert b0.snapshot_put(f"k{i}", units=1, payload=object(),
+                               tenant="a")
+    # tenant a's usage (4 snapshot units) == its sub-budget: every entry
+    # is protected from b's pressure
+    assert b0.snapshot_units() == 4
+    assert b0.squeezable_snapshot_units("b") == 0
+    assert b0.squeezable_snapshot_units("a") == 4     # own entries: free
+    sched = FleetScheduler(clock=_fake_clock())
+    sched.add_host("h0", b0)
+    assert sched.capacity("h0", tenant="b") == 4      # was 8 pre-fix
+    # no host can actually fit 5 units of b: place refuses instead of
+    # over-promising
+    with pytest.raises(AssertionError, match="no host can fit"):
+        sched.place("b0", 5, tenant="b")
+    # a peer with 5 genuinely free units wins spread placement even
+    # though h0's NAIVE free+pool figure (8) is larger
+    b1 = mk()
+    b1.register("pad", 3, tenant="a")
+    sched.add_host("h1", b1)
+    assert sched.capacity("h1", tenant="b") == 5
+    assert sched.place("b0", 5, tenant="b") == "h1"
+
+
+def test_squeezable_probe_is_sequential_not_a_sum():
+    """Partial protection: an owner 2 units above its sub-budget with
+    four 1-unit entries can spare exactly 2 — the probe simulates
+    sequential drops (re-evaluating post-drop usage), it does not sum
+    per-entry eligibility."""
+    b = HostMemoryBroker(8, clock=_fake_clock(), snapshot_pool_units=4,
+                         tenants={"a": 2, "b": 6})
+    for i in range(4):
+        assert b.snapshot_put(f"k{i}", units=1, payload=object(),
+                              tenant="a")
+    assert b.squeezable_snapshot_units("b") == 2
+    sched = FleetScheduler(clock=_fake_clock())
+    sched.add_host("h0", b)
+    assert sched.capacity("h0", tenant="b") == 4 + 2
+
+
+def test_anonymous_capacity_probe_is_the_conservative_floor():
+    """``tenant=None`` on a multi-tenant ledger treats every entry as
+    another tenant's; on a single-tenant ledger it resolves to the sole
+    tenant (own entries — fully droppable, the legacy figure)."""
+    multi = HostMemoryBroker(8, clock=_fake_clock(),
+                             snapshot_pool_units=4,
+                             tenants={"a": 4, "b": 4})
+    assert multi.snapshot_put("k", units=1, payload=object(), tenant="a")
+    assert multi.squeezable_snapshot_units() == 0     # a is at sub-budget
+    single = HostMemoryBroker(8, clock=_fake_clock(),
+                              snapshot_pool_units=4)
+    single.register("r", 2)
+    assert single.snapshot_put("k", units=2, payload=object())
+    assert single.squeezable_snapshot_units() == 2
+
+
+# ------------------------------------------------------- (b) retirement
+
+
+def test_retire_drain_migrates_every_restorable_entry():
+    """The acceptance path: a retiring host migrates (does NOT discard)
+    every restorable snapshot when peers have room; metadata-only
+    entries drop; the host is removed only at ``free == budget`` and
+    its id is never reused."""
+    sched = _fleet({"h0": 8, "h1": 8}, pool_units=4)
+    b0 = sched.brokers["h0"]
+    for k in ("k0", "k1"):
+        assert b0.snapshot_put(k, units=1, payload=("kv", k), nbytes=512)
+    assert b0.snapshot_put("meta", units=1, payload=None)  # unrestorable
+    sched.begin_retire("h0")
+    assert sched.active_hosts() == ["h1"]
+    assert sched.place("x", 2) == "h1"       # retiring: no placements
+    stats = sched.drain_host("h0")
+    assert stats == {"migrated": 2, "deferred": 0, "discarded": 1}
+    assert sched.drain_discarded == 1
+    for k in ("k0", "k1"):
+        assert sched.brokers["h1"].snapshot_restorable(k)
+    assert b0.free_units == b0.budget_units
+    assert sched.finish_retire("h0")
+    assert "h0" in sched.retired and "h0" not in sched.brokers
+    assert sched.host_retires == 1
+    sched.check_invariants()
+    with pytest.raises(AssertionError, match="never reused"):
+        sched.add_host("h0", HostMemoryBroker(8, clock=_fake_clock()))
+
+
+def test_retire_defers_without_room_then_migrates_when_it_appears():
+    """A restorable entry with no peer room is left for the next pump —
+    room may yet appear (and does, once the peer's replica shrinks)."""
+    sched = _fleet({"h0": 8, "h1": 8}, pool_units=2)
+    sched.brokers["h0"].snapshot_put("k", units=1, payload=object())
+    sched.brokers["h1"].register("r1", 8)    # peer: zero free units
+    sched.begin_retire("h0")
+    assert sched.drain_host("h0") \
+        == {"migrated": 0, "deferred": 1, "discarded": 0}
+    assert not sched.finish_retire("h0")     # pool still charged
+    sched.brokers["h1"].release_units("r1", 4)
+    assert sched.drain_host("h0") \
+        == {"migrated": 1, "deferred": 0, "discarded": 0}
+    assert sched.brokers["h1"].snapshot_restorable("k")
+    assert sched.finish_retire("h0")
+    assert sched.drain_discarded == 0
+
+
+def test_force_drain_discards_roomless_entries():
+    """End-of-run finalization: no foreground traffic remains, so a
+    roomless entry is dropped rather than stranding the retirement."""
+    sched = _fleet({"h0": 8, "h1": 8}, pool_units=2)
+    sched.brokers["h0"].snapshot_put("k", units=1, payload=object())
+    sched.brokers["h1"].register("r1", 8)
+    sched.begin_retire("h0")
+    assert sched.drain_host("h0", force=True) \
+        == {"migrated": 0, "deferred": 0, "discarded": 1}
+    assert sched.drain_discarded == 1
+    assert sched.finish_retire("h0")
+
+
+def test_deregister_settles_the_account_and_frees_the_id():
+    broker, _ = _mk_async(8, [("a", 2)])
+    assert broker.free_units == 6
+    assert broker.deregister("a") == 2
+    assert broker.free_units == 8 and "a" not in broker.granted
+    broker.check_invariants()
+    broker.register("a", 3)                  # fully forgotten: reusable
+    assert broker.granted["a"] == 3
+
+
+def test_router_masks_retiring_and_retired_hosts():
+    sched = _fleet({"h0": 8, "h1": 8})
+    sched.placements.update({"a": "h0", "b": "h1"})
+    r = Router("least_loaded", fleet=sched)
+    engines = {"a": _FakeEngine(5), "b": _FakeEngine(0)}
+    assert r.route(_req(), engines) == "b"   # plain least-loaded
+    sched.begin_retire("h1")
+    assert r.route(_req(), engines) == "a"   # retiring host masked
+    assert sched.finish_retire("h1")         # empty ledger: gone at once
+    assert r.route(_req(), engines) == "a"   # decommissioned: still masked
+    sched.begin_retire("h0")
+    # the whole fleet retiring: an arrival must still route somewhere
+    assert r.route(_req(), engines) == "b"
+
+
+def test_autoscale_policy_validates_thresholds():
+    with pytest.raises(AssertionError):
+        AutoscalePolicy(low_water=5, high_water=3, quiet_ticks=10)
+    with pytest.raises(AssertionError):
+        AutoscalePolicy(low_water=0, high_water=1, quiet_ticks=0)
+    with pytest.raises(AssertionError):
+        AutoscalePolicy(low_water=0, high_water=1, quiet_ticks=1,
+                        min_hosts=4, max_hosts=2)
+
+
+# -------------------------------------------- (c) contention and budget
+
+
+def test_concurrent_migrations_sharing_an_endpoint_halve_the_pipe():
+    """Two overlapping transfers out of one host each see half the
+    bandwidth (a retirement stampede slows itself down); a transfer on a
+    disjoint endpoint pair is NOT slowed.  latency=0 so the copy walls
+    are pure byte terms: 1000 B over 100 B/s = 10 s uncontended, 20 s
+    against one contender."""
+    sched = _fleet({"h0": 8, "h1": 8, "h2": 8, "h3": 8}, pool_units=4,
+                   bandwidth=100.0, latency=0.0)
+    for host, keys in (("h0", ("k0", "k1")), ("h2", ("k2",))):
+        for k in keys:
+            assert sched.brokers[host].snapshot_put(
+                k, units=1, payload=object(), nbytes=1000)
+    rec_a = sched.migrate_snapshot("k0", "h1")       # clock 1.0: alone
+    assert rec_a.copy_seconds == pytest.approx(10.0)
+    # clock 2.0: h2 -> h3 shares no endpoint with the in-flight h0 -> h1
+    rec_b = sched.migrate_snapshot("k2", "h3")
+    assert rec_b.copy_seconds == pytest.approx(10.0)
+    # clock 3.0: h0 -> h1 again, against rec_a still in flight (ends at
+    # 11.0): one contender, half the pipe, exactly 2x the byte wall
+    rec_c = sched.migrate_snapshot("k1", "h1")
+    assert rec_c.copy_seconds == pytest.approx(2 * rec_a.copy_seconds)
+    sched.check_invariants()
+
+
+def test_migration_budget_defers_drain_but_never_foreground():
+    """The drain budget caps in-flight scale-down bytes so a retirement
+    stampede cannot starve foreground restores: the over-budget drain
+    transfer returns None (counted, entry left in place); a foreground
+    ``ensure_local`` of the SAME entry proceeds immediately."""
+    sched = _fleet({"h0": 8, "h1": 8, "h2": 8}, pool_units=4,
+                   bandwidth=100.0, latency=0.0, budget_bytes=1500.0)
+    for k in ("k0", "k1"):
+        assert sched.brokers["h0"].snapshot_put(
+            k, units=1, payload=object(), nbytes=1000)
+    sched.begin_retire("h0")
+    stats = sched.drain_host("h0")
+    # k0 fits the budget (0 + 1000 <= 1500); k1 would push in-flight
+    # drain bytes to 2000 > 1500: deferred, not discarded
+    assert stats == {"migrated": 1, "deferred": 1, "discarded": 0}
+    assert sched.migration_deferred == 1
+    assert sched.brokers["h0"].snapshot_restorable("k1")
+    rec = sched.ensure_local("k1", "h2")     # foreground: never deferred
+    assert rec is not None and rec.dst == "h2"
+    assert sched.migration_deferred == 1     # unchanged
+    assert sched.brokers["h2"].snapshot_restorable("k1")
+    sched.check_invariants()
+
+
+# ------------------------------------- (d) snapshot_affinity cold fallback
+
+
+def test_snapshot_affinity_cold_fallback_avoids_draining_victim():
+    """The routing bug: with NOTHING cached (no warm row, no snapshot),
+    the fallback used pure load order and landed invocations on the
+    mid-reclaim victim; it now routes through ``_pick`` and counts
+    ``drain_avoided``."""
+    broker, _ = _mk_async(8, [("a", 2), ("b", 6)], pool_units=8)
+    broker.request_grant("b", 3)             # a is now draining
+    assert broker.open_order_units("a") > 0
+    engines = {"a": _FakeEngine(0), "b": _FakeEngine(5)}
+    r = Router("snapshot_affinity", broker=broker)
+    assert r.route(_req("html"), engines) == "b"    # dodged victim a
+    assert r.drain_avoided == 1
+    assert r.warm_routes == 0 and r.snapshot_routes == 0
+
+
+# ------------------------------------------------ (e) truncation honesty
+
+
+def test_exhausting_max_ticks_warns_and_flags_truncated():
+    broker = HostMemoryBroker(16, async_reclaim=True, clock=_fake_clock())
+    a = StubReplica("a", broker, units=4)
+    reqs = [Request(rid="r0", profile=PROFILES["cnn"], submit_s=0.0)]
+    sim = FleetSim({"h0": {"a": a}}, brokers={"h0": broker})
+    with pytest.warns(RuntimeWarning, match="truncated"):
+        m = sim.run(list(reqs), max_ticks=2)
+    assert m["truncated"] is True
+
+
+def test_completed_run_is_not_truncated():
+    broker = HostMemoryBroker(16, async_reclaim=True, clock=_fake_clock())
+    a = StubReplica("a", broker, units=4)
+    reqs = [Request(rid="r0", profile=PROFILES["cnn"], submit_s=0.0)]
+    sim = FleetSim({"h0": {"a": a}}, brokers={"h0": broker})
+    m = sim.run(list(reqs), max_virtual_s=100)
+    assert m["completed"] == 1
+    assert m["truncated"] is False
+
+
+# ------------------------------------------- (f) autoscaled determinism
+
+
+def test_autoscaled_run_is_bit_identical_for_a_fixed_seed():
+    """Boot + retire mid-run are pure functions of (trace, seed): two
+    seed-0 runs produce byte-identical rows, lifecycle counters
+    included."""
+    from repro.cluster.scenarios import run_scenario
+    a = json.dumps(run_scenario("autoscale_burst", seed=0),
+                   sort_keys=True)
+    b = json.dumps(run_scenario("autoscale_burst", seed=0),
+                   sort_keys=True)
+    assert a == b
+    row = json.loads(a)
+    assert row["host_boots"] >= 1 and row["host_retires"] >= 1
+    assert row["killed"] == 0

@@ -37,14 +37,16 @@ BASELINE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                         "BENCH_6.json")
 MESH_BASELINE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                              "BENCH_7.json")
+AUTOSCALE_BASELINE = os.path.join(os.path.dirname(__file__), "..",
+                                  "benchmarks", "BENCH_8.json")
 
 
 def _committed_baseline() -> dict:
     """The full committed surface: BENCH_6 (single-device bank) merged
-    with BENCH_7 (the mesh family) — each scenario lives in exactly one
-    file."""
+    with BENCH_7 (the mesh family) and BENCH_8 (the autoscale family) —
+    each scenario lives in exactly one file."""
     merged: dict = {}
-    for path in (BASELINE, MESH_BASELINE):
+    for path in (BASELINE, MESH_BASELINE, AUTOSCALE_BASELINE):
         with open(path) as f:
             part = json.load(f)
         assert not set(merged) & set(part)
@@ -65,7 +67,8 @@ def test_row_schema_is_pinned():
         "ttft_p99_ms_by_tier", "stall_p99_ms",
         "warm_starts", "restore_starts", "remote_restore_starts",
         "cold_starts", "squeezes_by_tenant", "reclaim_orders",
-        "order_units", "snapshot_migrations", "hedges", "routes",
+        "order_units", "snapshot_migrations", "host_boots",
+        "host_retires", "hedges", "routes",
         "host_seconds", "free_units_end", "device_units_end",
     )
     assert set(TIME_FIELDS) < set(ROW_SCHEMA)
