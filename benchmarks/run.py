@@ -25,9 +25,10 @@ committed row.
 Baselines are split by PR of origin so each file stays an append-only
 artifact: ``BENCH_6.json`` carries the single-device bank,
 ``BENCH_7.json`` the mesh family (sharded hosts), ``BENCH_8.json`` the
-autoscale family (host lifecycle + drain-via-migration).  ``--check``
-merges every committed file; ``--update-baseline`` rewrites each row
-into the file that owns its family.
+autoscale family (host lifecycle + drain-via-migration), and
+``BENCH_9.json`` the dedup family (content-addressed snapshot pages).
+``--check`` merges every committed file; ``--update-baseline`` rewrites
+each row into the file that owns its family.
 """
 from __future__ import annotations
 
@@ -43,6 +44,8 @@ MESH_FAMILIES = ("mesh",)       # families whose rows live in BENCH_7
 AUTOSCALE_BASELINE = os.path.join(os.path.dirname(__file__),
                                   "BENCH_8.json")
 AUTOSCALE_FAMILIES = ("autoscale",)  # families whose rows live in BENCH_8
+DEDUP_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_9.json")
+DEDUP_FAMILIES = ("dedup",)     # families whose rows live in BENCH_9
 
 
 def _time_values(row: dict) -> dict:
@@ -64,7 +67,7 @@ def _baseline_files(args) -> list[str]:
     the per-family shards (each skipped only if it was never written)."""
     files = [args.baseline]
     if os.path.abspath(args.baseline) == os.path.abspath(DEFAULT_BASELINE):
-        for shard in (MESH_BASELINE, AUTOSCALE_BASELINE):
+        for shard in (MESH_BASELINE, AUTOSCALE_BASELINE, DEDUP_BASELINE):
             if os.path.exists(shard):
                 files.append(shard)
     return files
@@ -85,11 +88,15 @@ def run_scenarios(args) -> int:
                 if r["family"] in MESH_FAMILIES}
         autoscale = {n: r for n, r in rows.items()
                      if r["family"] in AUTOSCALE_FAMILIES}
+        dedup = {n: r for n, r in rows.items()
+                 if r["family"] in DEDUP_FAMILIES}
         main_rows = {n: r for n, r in rows.items()
-                     if n not in mesh and n not in autoscale}
+                     if n not in mesh and n not in autoscale
+                     and n not in dedup}
         for path, part in ((args.baseline, main_rows),
                            (MESH_BASELINE, mesh),
-                           (AUTOSCALE_BASELINE, autoscale)):
+                           (AUTOSCALE_BASELINE, autoscale),
+                           (DEDUP_BASELINE, dedup)):
             if not part:
                 continue
             with open(path, "w") as f:

@@ -23,7 +23,12 @@ when the destination host lacks a restorable snapshot for a function but
 a peer holds one, the scheduler debits the peer's pool (its ledger
 credits the units back to its free pool), charges a modeled inter-host
 copy — REAL payload bytes over a configurable ``bandwidth_bytes_per_s``
-plus a fixed ``link_latency_s`` — and credits the destination pool.  The
+plus a fixed ``link_latency_s`` — and credits the destination pool.
+Content-addressed entries migrate dedup-aware: only pages the
+destination's ``PageStore`` LACKS cross the wire (a manifest whose pages
+the destination already holds moves metadata only), so migration bytes
+shrink with fleet-wide prefix sharing while the contention model is
+unchanged.  The
 copy wall rides the migrated ``Snapshot`` (``copy_seconds``) and is paid
 by the first restore that uses it (``ServeEngine._start_restore`` tags
 that event ``source="remote"``), so a remote restore lands strictly
@@ -83,7 +88,9 @@ PLACEMENTS = ("spread", "pack")
 class MigrationRecord:
     """One cross-host snapshot migration: ``key``'s warm state moved from
     ``src`` to ``dst``, paying a modeled ``copy_seconds`` transfer for
-    ``nbytes`` real payload bytes."""
+    ``nbytes`` bytes ACTUALLY moved — for a content-addressed entry only
+    the pages the destination lacked, which may be far below the entry's
+    full payload size (and zero for a fully-shared manifest)."""
     key: str
     src: str
     dst: str
@@ -111,17 +118,26 @@ class AutoscalePolicy:
     free-unit slack drops below ``low_water``; after ``quiet_ticks``
     consecutive evaluations with slack at/above ``high_water``, begin
     retiring the emptiest host (most free units).  ``min_hosts`` /
-    ``max_hosts`` bound the fleet size."""
+    ``max_hosts`` bound the fleet size.
+
+    ``boot_latency_s`` models real provisioning lag: a booted host joins
+    the fleet immediately (its capacity is visible, so the trigger does
+    not re-fire every tick while one is already coming up) but becomes
+    ROUTABLE only after the latency elapses on the fleet clock — which
+    makes ``low_water`` a real tuning knob: the margin must cover the
+    demand that arrives while the new host is still booting."""
     low_water: int
     high_water: int
     quiet_ticks: int
     min_hosts: int = 1
     max_hosts: int = 8
+    boot_latency_s: float = 0.0
 
     def __post_init__(self):
         assert 0 <= self.low_water <= self.high_water
         assert self.quiet_ticks > 0
         assert 1 <= self.min_hosts <= self.max_hosts
+        assert self.boot_latency_s >= 0.0
 
 
 class FleetScheduler:
@@ -149,6 +165,10 @@ class FleetScheduler:
         # placements remain resolvable (their replicas were decommissioned)
         self.retiring: set[str] = set()
         self.retired: set[str] = set()
+        # hosts still provisioning: routable only once the fleet clock
+        # passes their ready time (they DO count toward capacity/slack,
+        # so the autoscale trigger does not stampede while one boots)
+        self._ready_at: dict[str, float] = {}
         self.host_boots = 0
         self.host_retires = 0
         self.drain_discarded = 0     # pool entries dropped, not migrated
@@ -213,11 +233,30 @@ class FleetScheduler:
         return host
 
     # ------------------------------------------------------ host lifecycle
-    def boot_host(self, host_id: str, broker: HostMemoryBroker) -> None:
-        """Scale-up: add a freshly provisioned host to the fleet."""
+    def boot_host(self, host_id: str, broker: HostMemoryBroker, *,
+                  ready_delay: float = 0.0) -> None:
+        """Scale-up: add a freshly provisioned host to the fleet.  With
+        ``ready_delay`` the host is booked (capacity visible, placements
+        allowed) but not ROUTABLE until the fleet clock advances past
+        ``now + ready_delay`` — the router masks its replicas until
+        then, modeling real provisioning latency."""
+        assert ready_delay >= 0.0, ready_delay
         self.add_host(host_id, broker)
+        if ready_delay > 0.0:
+            self._ready_at[host_id] = self._clock() + ready_delay
         self.host_boots += 1
         self.check_invariants()
+
+    def host_ready(self, host_id: str) -> bool:
+        """Has ``host_id`` finished provisioning (routable)?  Hosts
+        booted without a delay are ready immediately."""
+        at = self._ready_at.get(host_id)
+        if at is None:
+            return True
+        if self._clock() >= at:
+            del self._ready_at[host_id]          # provisioning complete
+            return True
+        return False
 
     def begin_retire(self, host_id: str) -> None:
         """Mark ``host_id`` retiring: it stops accepting placements (and
@@ -244,6 +283,7 @@ class FleetScheduler:
             return stats
         for key in list(b.snapshots.keys()):     # LRU -> MRU
             snap = b.snapshots.peek(key)
+            specs = b.snapshot_page_specs(key)   # None for legacy entries
             dst = None
             if snap.restorable:
                 for h in sorted((h for h in self.brokers
@@ -251,7 +291,8 @@ class FleetScheduler:
                                 key=lambda h: (-self.brokers[h].free_units,
                                                h)):
                     if self.brokers[h].snapshot_room(key, snap.units,
-                                                     tenant=snap.tenant):
+                                                     tenant=snap.tenant,
+                                                     pages=specs):
                         dst = h
                         break
                 if dst is None and not force:
@@ -282,6 +323,7 @@ class FleetScheduler:
             return False
         b.check_invariants()
         del self.brokers[host_id]
+        self._ready_at.pop(host_id, None)
         self.retiring.discard(host_id)
         self.retired.add(host_id)
         self.host_retires += 1
@@ -364,48 +406,65 @@ class FleetScheduler:
         assert src_host != dst_host and src.snapshot_restorable(key), \
             (key, src_host, dst_host)
         snap = src.snapshots.peek(key)
+        specs = src.snapshot_page_specs(key)     # None for legacy entries
         # the entry keeps its owner tenant across hosts: the destination
         # charges its ledger on the SAME tenant's sub-budget account
-        if not dst.snapshot_room(key, snap.units, tenant=snap.tenant):
+        if not dst.snapshot_room(key, snap.units, tenant=snap.tenant,
+                                 pages=specs):
             self.migration_denied += 1           # destination under
             return None                          # pressure: cold-start
         units, nbytes = snap.units, snap.nbytes
         payload, tokens = snap.payload, snap.tokens
         fragments = snap.fragments
+        # dedup-aware transfer sizing: only pages the destination store
+        # LACKS cross the wire — a manifest the destination already
+        # fully holds moves metadata only (zero bytes, zero hops).
+        # Legacy opaque entries move their whole payload.
+        if specs is not None:
+            size = {d: b for d, _u, b, _p in specs}
+            missing = dst.missing_pages(list(size))
+            moved_nbytes = sum(size[d] for d in missing)
+            n_xfer = len(missing)
+        else:
+            moved_nbytes = nbytes
+            n_xfer = len(fragments) if fragments is not None else 1
         now = self._clock()                      # read ONCE per migration
         if drain and self.migration_budget_bytes is not None \
-                and self._drain_bytes_inflight(now) + nbytes \
+                and self._drain_bytes_inflight(now) + moved_nbytes \
                 > self.migration_budget_bytes:
             self.migration_deferred += 1
             return None
         # any transfer wall the source itself still owed compounds: a
         # twice-migrated snapshot pays both hops at its first restore.
-        # Sharded entries move one fragment per device — each fragment is
-        # its own transfer, so the fixed link latency (propagation: it
-        # does not contend) is paid per fragment while the byte wall is
-        # the total payload over THIS transfer's share of the pipe:
-        # in-flight transfers touching either endpoint split the NIC, so
-        # n concurrent migrations out of one retiring host each see
-        # bandwidth / (1 + n_others) (unsharded entries are the
-        # 1-fragment case; an uncontended transfer is the legacy model
+        # Sharded entries move one fragment per device and paged entries
+        # one transfer per MISSING page — each is its own transfer, so
+        # the fixed link latency (propagation: it does not contend) is
+        # paid per transfer while the byte wall is the moved payload
+        # over THIS transfer's share of the pipe: in-flight transfers
+        # touching either endpoint split the NIC, so n concurrent
+        # migrations out of one retiring host each see
+        # bandwidth / (1 + n_others) (unsharded legacy entries are the
+        # 1-transfer case; an uncontended transfer is the legacy model
         # bit-for-bit).
-        n_frag = len(fragments) if fragments is not None else 1
         share = self.bandwidth_bytes_per_s \
             / (1 + self._contenders(src_host, dst_host, now))
-        hop_s = n_frag * self.link_latency_s + nbytes / share
+        hop_s = n_xfer * self.link_latency_s + moved_nbytes / share
         copy_s = snap.copy_seconds + hop_s
-        self._inflight.append(_Transfer(src=src_host, dst=dst_host,
-                                        end=now + hop_s, nbytes=nbytes,
-                                        drain=drain))
+        if moved_nbytes > 0:
+            self._inflight.append(_Transfer(src=src_host, dst=dst_host,
+                                            end=now + hop_s,
+                                            nbytes=moved_nbytes,
+                                            drain=drain))
         src.snapshot_drop(key)                   # debit: src ledger credits
         ok = dst.snapshot_put(key, units=units, payload=payload,
                               tokens=tokens, nbytes=nbytes,
                               replica_id=snap.replica_id,
                               origin_host=src_host, copy_seconds=copy_s,
-                              tenant=snap.tenant, fragments=fragments)
+                              tenant=snap.tenant, fragments=fragments,
+                              pages=specs)
         assert ok, "room check promised space at the destination"
         rec = MigrationRecord(key=key, src=src_host, dst=dst_host,
-                              units=units, nbytes=nbytes,
+                              units=units, nbytes=moved_nbytes,
                               copy_seconds=copy_s, at=now)
         self.migrations.append(rec)
         return rec
@@ -424,6 +483,7 @@ class FleetScheduler:
             "migration_deferred": self.migration_deferred,
             "retiring": sorted(self.retiring),
             "retired": sorted(self.retired),
+            "booting": sorted(self._ready_at),
             "host_boots": self.host_boots,
             "host_retires": self.host_retires,
             "drain_discarded": self.drain_discarded,
@@ -438,6 +498,8 @@ class FleetScheduler:
             b.check_invariants()
         assert self.retiring <= set(self.brokers), \
             (self.retiring, sorted(self.brokers))
+        assert set(self._ready_at) <= set(self.brokers), \
+            (sorted(self._ready_at), sorted(self.brokers))
         assert not self.retired & set(self.brokers)
         for rid, host in self.placements.items():
             # a decommissioned replica's placement survives its host

@@ -247,14 +247,14 @@ class MemoryBroker:
     # offer and miss every lookup, so engines wired to them behave exactly
     # as before the pool existed (warm state is simply discarded).
     def snapshot_room(self, key: str, units: int, *, tenant: str = "",
-                      replica_id: str = "") -> bool:
+                      replica_id: str = "", pages: Any = None) -> bool:
         return False
 
     def snapshot_put(self, key: str, *, units: int, payload: Any = None,
                      tokens: int = 0, nbytes: int = 0,
                      replica_id: str = "", origin_host: str = "",
                      copy_seconds: float = 0.0, tenant: str = "",
-                     fragments: Any = None) -> bool:
+                     fragments: Any = None, pages: Any = None) -> bool:
         return False
 
     def snapshot_lookup(self, key: str) -> Optional[Snapshot]:
@@ -268,6 +268,23 @@ class MemoryBroker:
 
     def snapshot_units(self) -> int:
         return 0
+
+    def snapshot_page_specs(self, key: str) -> Optional[list]:
+        """Page specs ``(digest, units, nbytes, payload)`` of a paged
+        entry's manifest, in manifest order (``None`` for absent or
+        legacy opaque entries)."""
+        return None
+
+    def missing_pages(self, digests: Any) -> list:
+        """Distinct digests the host's page store does NOT hold — what a
+        migration must actually move here.  Poolless brokers lack every
+        page."""
+        out, seen = [], set()
+        for d in digests:
+            if d not in seen:
+                seen.add(d)
+                out.append(d)
+        return out
 
 
 class AlwaysGrantBroker(MemoryBroker):
@@ -506,23 +523,81 @@ class HostMemoryBroker(MemoryBroker):
             return self.ledger.tenant_of[replica_id]
         return self.ledger.resolve_tenant(None)
 
+    def _entry_delta(self, snap: Snapshot, sim=None
+                     ) -> tuple[int, dict[str, int]]:
+        """What dropping ``snap`` right now would do to the ledger:
+        ``(units freed, per-tenant snapshot-account delta)``.  A legacy
+        opaque entry frees its face value on its owner; a paged manifest
+        frees only pages whose refcount hits zero and hands still-shared
+        pages' charge to a surviving tenant (``sim`` carries the walk
+        state for multi-drop planning; default is the live store)."""
+        if snap.pages is None:
+            owner = snap.tenant or self.ledger.resolve_tenant(None)
+            return snap.units, {owner: -snap.units}
+        if sim is None:
+            sim = self.snapshots.pages.simulate()
+        return sim.deref_entry(snap)
+
+    def _release_entry_charge(self, snap: Snapshot) -> int:
+        """Return an evicted/dropped entry's charge to the free pool: a
+        legacy credit on its owner, or per-page deref flows for a
+        manifest — freed pages credit their owners, still-shared pages'
+        charge is reattributed to a surviving tenant (never stranded).
+        Returns units actually freed."""
+        if snap.pages is None:
+            self.ledger.snapshot_credit(snap.units, snap.tenant or None)
+            return snap.units
+        store = self.snapshots.pages
+        freed = 0
+        for digest in snap.pages:
+            outcome, u, frm, to = store.deref(digest, snap.tenant)
+            if outcome == "freed":
+                self.ledger.snapshot_credit(u, frm or None)
+                freed += u
+            elif outcome == "reattributed":
+                self.ledger.snapshot_reattribute(u, frm or None,
+                                                 to or None)
+        return freed
+
     def _squeeze_eligible(self, tenant: str
                           ) -> Callable[[Snapshot], bool]:
         """The fairness rule: ``tenant``'s pressure may drop its OWN
         entries freely, but another tenant's entry only while that owner
         stays at or above its sub-budget afterwards — one tenant's grant
         can never squeeze another tenant's snapshots past its
-        sub-budget."""
+        sub-budget.  For paged entries the rule is evaluated over the
+        drop's real per-tenant deltas (unique pages freed, owner
+        handoffs), not the manifest's referenced total."""
         led = self.ledger
         def ok(snap: Snapshot) -> bool:
-            owner = snap.tenant or led.resolve_tenant(None)
-            if owner == tenant:
-                return True
-            return led.tenant_usage(owner) - snap.units \
-                >= led.sub_budgets[owner]
+            _, delta = self._entry_delta(snap)
+            for owner, du in delta.items():
+                if du >= 0 or owner == tenant:
+                    continue
+                if led.tenant_usage(owner) + du < led.sub_budgets[owner]:
+                    return False
+            return True
         return ok
 
-    def _evict_plan(self, key: str, units: int, tenant: str
+    @staticmethod
+    def _check_pages(pages, units: int, topology) -> tuple:
+        """Normalize and validate a page-spec list ``(digest, units,
+        nbytes, payload)``: manifest units must equal the page sum and
+        every page's units must stripe balanced over the mesh (so any
+        subset of pages charges/credits balanced)."""
+        pages = tuple((d, int(u), int(nb), pl) for d, u, nb, pl in pages)
+        assert len(pages) >= 1, "empty page manifest"
+        assert units == sum(u for _, u, _, _ in pages), \
+            f"manifest units {units} != page sum " \
+            f"{sum(u for _, u, _, _ in pages)}"
+        for d, u, _nb, pl in pages:
+            assert u >= 0, (d, u)
+            assert pl is not None, f"page {d!r} without payload"
+            topology.assert_balanced(u, f"page {d!r}")
+        return pages
+
+    def _evict_plan(self, key: str, units: int, tenant: str,
+                    pages: Optional[tuple] = None
                     ) -> Optional[list[str]]:
         """Exact eviction plan for inserting a ``units``-block snapshot
         under ``key``: the ordered entry keys to drop (same-key
@@ -530,11 +605,38 @@ class HostMemoryBroker(MemoryBroker):
         entries) so the insert fits both the free pool and the pool cap —
         or ``None`` when no eligible plan exists.  ``snapshot_room`` asks
         whether a plan exists; ``snapshot_put`` executes the same plan, so
-        the two can never disagree."""
+        the two can never disagree.
+
+        With ``pages`` the arithmetic runs over *unique* pages: the
+        incoming charge is only what the store doesn't already hold (a
+        fully-shared manifest charges nothing), evicting a manifest frees
+        only pages whose refcount would hit zero, and both are tracked on
+        one refcount simulation so eviction/recharge interactions (an
+        evicted sharer freeing a page the incoming manifest then re-pays)
+        are priced exactly as execution will replay them."""
         pool = self.snapshots
         if pool is None or units <= 0 or self._inline_reclaim:
             return None
-        if not pool.fits(units):
+        # one refcount simulation carries the whole walk, so sequential
+        # deref interactions (entry A's drop making entry B's pages
+        # unique) are priced exactly as execution will replay them
+        sim = pool.pages.simulate()
+
+        def charge_now() -> int:
+            return units if pages is None else sim.new_units(pages)
+
+        # cap feasibility: the floor is the charge with everything else
+        # evicted — for a manifest, its distinct pages' units
+        if pages is None:
+            floor = units
+        else:
+            seen: set = set()
+            floor = 0
+            for d, u, _nb, _pl in pages:
+                if d not in seen:
+                    seen.add(d)
+                    floor += u
+        if not pool.fits(floor):
             return None
         ok = self._squeeze_eligible(tenant)
         plan: list[str] = []
@@ -544,15 +646,17 @@ class HostMemoryBroker(MemoryBroker):
             if not ok(same):
                 return None     # cannot replace a protected entry
             plan.append(key)
-            freed += same.units
+            f, _ = self._entry_delta(same, sim=sim)
+            freed += f
 
         def fits_now() -> bool:
             # a sharded snapshot charges one fragment per device, so the
             # headroom that matters is the BALANCED free pool (scarcest
             # device × devices) — identical to ``free_units`` at devices=1
-            return units <= self.ledger.balanced_free() + freed and (
+            charge = charge_now()
+            return charge <= self.ledger.balanced_free() + freed and (
                 pool.max_units is None
-                or pool.units - freed + units <= pool.max_units)
+                or pool.units - freed + charge <= pool.max_units)
 
         if fits_now():
             return plan
@@ -563,31 +667,36 @@ class HostMemoryBroker(MemoryBroker):
             if not ok(snap):
                 continue                    # protected: skip, not reorder
             plan.append(k)
-            freed += snap.units
+            f, _ = self._entry_delta(snap, sim=sim)
+            freed += f
             if fits_now():
                 return plan
         return None
 
     def snapshot_room(self, key: str, units: int, *, tenant: str = "",
-                      replica_id: str = "") -> bool:
+                      replica_id: str = "", pages: Any = None) -> bool:
         """Would a ``units``-block snapshot for ``key`` fit right now?  A
         same-key predecessor's charge and every *squeeze-eligible* entry
         count as reclaimable headroom (another tenant's entries only down
         to its sub-budget); insertion never creates pressure (it only
         spends free units), so the answer is also the engine's gate for
-        paying the copy-out at all.  Declines while a sync inline steal
-        is in flight: mid-steal free units belong to the open grant (see
+        paying the copy-out at all.  With ``pages`` the probe prices only
+        the UNIQUE pages the store lacks — a fully-shared manifest always
+        has room.  Declines while a sync inline steal is in flight:
+        mid-steal free units belong to the open grant (see
         ``_reclaim_from_idlest``)."""
         if self.snapshots is None:
             return False
         t = self._snap_tenant(tenant, replica_id)
-        return self._evict_plan(key, units, t) is not None
+        if pages is not None:
+            pages = self._check_pages(pages, units, self.topology)
+        return self._evict_plan(key, units, t, pages=pages) is not None
 
     def snapshot_put(self, key: str, *, units: int, payload: Any = None,
                      tokens: int = 0, nbytes: int = 0,
                      replica_id: str = "", origin_host: str = "",
                      copy_seconds: float = 0.0, tenant: str = "",
-                     fragments: Any = None) -> bool:
+                     fragments: Any = None, pages: Any = None) -> bool:
         """Persist a copied-out partition into the pool, charging ``units``
         against the free pool on the owner tenant's account.  A same-key
         predecessor is replaced; squeeze-eligible LRU entries are evicted
@@ -598,14 +707,22 @@ class HostMemoryBroker(MemoryBroker):
         restore lands between a local restore and a cold prefill.
         ``fragments`` is the sharded-KV form: one payload fragment per
         device; the entry is restorable only when every fragment is
-        present, and its charge stripes balanced over the mesh."""
+        present, and its charge stripes balanced over the mesh.
+
+        ``pages`` makes the entry a content-addressed manifest: a list of
+        ``(digest, units, nbytes, payload)`` page specs whose units sum
+        to ``units``.  Each page is ref'd into the host-wide store; only
+        pages the store lacks charge the ledger (owner = this entry's
+        tenant), so N profiles sharing a prefix pay for it once."""
         if self.snapshots is None:
             return False
         if fragments is not None:
             fragments = tuple(fragments)
             assert units % len(fragments) == 0, (units, len(fragments))
         t = self._snap_tenant(tenant, replica_id)
-        plan = self._evict_plan(key, units, t)
+        if pages is not None:
+            pages = self._check_pages(pages, units, self.topology)
+        plan = self._evict_plan(key, units, t, pages=pages)
         if plan is None:
             return False
         pool = self.snapshots
@@ -616,15 +733,26 @@ class HostMemoryBroker(MemoryBroker):
                 pool.replaced += 1
             else:
                 snap = pool.evict(k)
-            self.ledger.snapshot_credit(snap.units, snap.tenant or None)
+            self._release_entry_charge(snap)
         now = self._clock()
-        self.ledger.snapshot_charge(units, t)
+        manifest = None
+        if pages is None:
+            self.ledger.snapshot_charge(units, t)
+        else:
+            new_units = 0
+            for digest, u, nb, pl in pages:
+                if pool.pages.ref(digest, units=u, nbytes=nb,
+                                  payload=pl, tenant=t):
+                    new_units += u
+            if new_units:
+                self.ledger.snapshot_charge(new_units, t)
+            manifest = tuple(digest for digest, _u, _nb, _pl in pages)
         pool.insert(Snapshot(key=key, units=units, tokens=tokens,
                              nbytes=nbytes, payload=payload,
                              replica_id=replica_id, created_at=now,
                              last_used=now, origin_host=origin_host,
                              copy_seconds=copy_seconds, tenant=t,
-                             fragments=fragments))
+                             fragments=fragments, pages=manifest))
         return True
 
     def snapshot_lookup(self, key: str) -> Optional[Snapshot]:
@@ -658,19 +786,43 @@ class HostMemoryBroker(MemoryBroker):
     def snapshot_drop(self, key: str) -> int:
         """Explicitly invalidate ``key`` (tests / staleness): its charge
         returns to the free pool (owner tenant's account).  Returns units
-        freed."""
+        freed — for a paged entry, only pages whose refcount hit zero."""
         if self.snapshots is None:
             return 0
         snap = self.snapshots.peek(key)
         if snap is None:
             return 0
         self.snapshots.drop(key)
-        self.ledger.snapshot_credit(snap.units, snap.tenant or None)
-        return snap.units
+        return self._release_entry_charge(snap)
 
     def snapshot_units(self) -> int:
-        """The pool's current charge against the host budget."""
+        """The pool's current charge against the host budget (unique
+        pages counted once)."""
         return self.snapshots.units if self.snapshots is not None else 0
+
+    def snapshot_page_specs(self, key: str) -> Optional[list]:
+        """Page specs ``(digest, units, nbytes, payload)`` of a paged
+        entry's manifest, in manifest order — what a migration carries
+        and a restore reassembles (``None`` for absent/legacy
+        entries)."""
+        if self.snapshots is None:
+            return None
+        snap = self.snapshots.peek(key)
+        if snap is None or snap.pages is None:
+            return None
+        out = []
+        for digest in snap.pages:
+            p = self.snapshots.pages.get(digest)
+            out.append((digest, p.units, p.nbytes, p.payload))
+        return out
+
+    def missing_pages(self, digests: Any) -> list:
+        """Distinct digests this host's store does NOT hold — what a
+        migration must actually move here (dedup-aware transfer
+        sizing)."""
+        if self.snapshots is None:
+            return super().missing_pages(digests)
+        return self.snapshots.pages.missing(digests)
 
     def squeezable_snapshot_units(self, tenant: Optional[str] = None) -> int:
         """Units that pressure under ``tenant`` could squeeze out of the
@@ -680,11 +832,14 @@ class HostMemoryBroker(MemoryBroker):
         Walks entries in LRU order simulating sequential drops exactly
         like ``_squeeze_snapshots``: the fairness predicate is
         re-evaluated against the post-drop owner usage, so two entries
-        whose owner can only spare one are counted once.  ``tenant=None``
-        resolves to the sole tenant on a single-tenant ledger; on a
-        multi-tenant ledger it is the *anonymous* probe — every entry is
-        treated as another tenant's (the conservative floor: a real
-        squeeze can only free more)."""
+        whose owner can only spare one are counted once, and paged
+        entries count only pages whose refcount would hit zero under the
+        walk's refcount simulation (shared pages free nothing until
+        their last manifest drops).  ``tenant=None`` resolves to the
+        sole tenant on a single-tenant ledger; on a multi-tenant ledger
+        it is the *anonymous* probe — every entry is treated as another
+        tenant's (the conservative floor: a real squeeze can only free
+        more)."""
         if self.snapshots is None:
             return 0
         led = self.ledger
@@ -692,15 +847,22 @@ class HostMemoryBroker(MemoryBroker):
             tenant = led.resolve_tenant(tenant)
         usage: dict[str, int] = {}
         freed = 0
+        sim = self.snapshots.pages.simulate()
         for key in self.snapshots.keys():          # LRU -> MRU
             snap = self.snapshots.peek(key)
-            owner = snap.tenant or led.resolve_tenant(None)
-            if owner != tenant:
-                u = usage.get(owner, led.tenant_usage(owner))
-                if u - snap.units < led.sub_budgets[owner]:
-                    continue                       # protected: skipped
-                usage[owner] = u - snap.units
-            freed += snap.units
+            trial = sim.clone()
+            f, delta = self._entry_delta(snap, sim=trial)
+            if any(owner != tenant and du < 0
+                   and usage.get(owner, led.tenant_usage(owner)) + du
+                   < led.sub_budgets[owner]
+                   for owner, du in delta.items()):
+                continue                           # protected: skipped
+            sim = trial
+            for owner, du in delta.items():
+                if owner != tenant:
+                    usage[owner] = usage.get(
+                        owner, led.tenant_usage(owner)) + du
+            freed += f
         return freed
 
     def _squeeze_snapshots(self, deficit: int, *, requester: str,
@@ -711,7 +873,10 @@ class HostMemoryBroker(MemoryBroker):
         units land in the free pool immediately.  Eligibility is the
         tenant fairness rule (``_squeeze_eligible``): the requesting
         tenant drops its own entries freely but can take another tenant's
-        only down to that tenant's sub-budget.  Returns units freed."""
+        only down to that tenant's sub-budget.  A paged entry frees only
+        pages whose refcount hits zero (its ``SqueezeRecord`` logs that
+        figure, possibly 0 for a fully-shared manifest).  Returns units
+        freed."""
         if self.snapshots is None or deficit <= 0:
             return 0
         if tenant is None:
@@ -725,10 +890,10 @@ class HostMemoryBroker(MemoryBroker):
                 break
             # credit per entry on its OWNER's account so the protection
             # predicate sees up-to-date tenant usage for the next pick
-            self.ledger.snapshot_credit(snap.units, snap.tenant or None)
-            freed += snap.units
+            f = self._release_entry_charge(snap)
+            freed += f
             self.squeeze_log.append(SqueezeRecord(
-                requester=requester, key=snap.key, units=snap.units,
+                requester=requester, key=snap.key, units=f,
                 nbytes=snap.nbytes, at=now,
                 tenant=snap.tenant or self.ledger.resolve_tenant(None)))
         return freed
@@ -1022,6 +1187,9 @@ class HostMemoryBroker(MemoryBroker):
             "by_mode": by_mode,
             "devices": self.ledger.device_report(),
             "snapshot_units": self.snapshot_units(),
+            "referenced_snapshot_units": (
+                self.snapshots.referenced_units
+                if self.snapshots is not None else 0),
             "snapshot_squeezes": len(self.squeeze_log),
             "squeezed_units": sum(r.units for r in self.squeeze_log),
             "snapshots": (self.snapshots.report()
@@ -1042,13 +1210,20 @@ class HostMemoryBroker(MemoryBroker):
             "pool charge diverged from the ledger"
         if self.snapshots is not None:
             self.snapshots.check_invariants()
-            # per-tenant cross-check: the pool's entries, grouped by owner,
-            # must sum to the ledger's tenant snapshot accounts
+            # per-tenant cross-check: legacy entries grouped by owner plus
+            # unique pages grouped by their CHARGED owner must sum to the
+            # ledger's tenant snapshot accounts — so an evicted shared
+            # page can never strand charge on a departed tenant
             by_tenant: dict[str, int] = {}
             for k in self.snapshots.keys():
                 s = self.snapshots.peek(k)
+                if s.pages is not None:
+                    continue                # charged via the page store
                 t = s.tenant or self.ledger.resolve_tenant(None)
                 by_tenant[t] = by_tenant.get(t, 0) + s.units
+            for t, u in self.snapshots.pages.owner_units().items():
+                t = t or self.ledger.resolve_tenant(None)
+                by_tenant[t] = by_tenant.get(t, 0) + u
             for t in self.ledger.sub_budgets:
                 assert by_tenant.get(t, 0) == self.ledger.tenant_snapshot(t), \
                     f"tenant {t} pool entries diverged from ledger account"

@@ -360,6 +360,25 @@ class BudgetLedger:
             self._free_dev[d] += per
         self._tenant_snapshot[t] -= units
 
+    def snapshot_reattribute(self, units: int,
+                             frm: Optional[str] = None,
+                             to: Optional[str] = None) -> None:
+        """Shared-page owner handoff: the owning tenant's last reference
+        to a still-referenced page dropped, so its charge moves to a
+        surviving referencing tenant.  Pure attribution — the device
+        vectors and the host snapshot total are untouched — so evicting
+        a shared page never strands charge on a tenant that no longer
+        references it."""
+        assert units >= 0, units
+        f, t = self.resolve_tenant(frm), self.resolve_tenant(to)
+        if units == 0 or f == t:
+            return
+        assert units <= self._tenant_snapshot[f], \
+            f"tenant {f} reattributing {units} snapshot units it owns " \
+            f"{self._tenant_snapshot[f]} of"
+        self._tenant_snapshot[f] -= units
+        self._tenant_snapshot[t] += units
+
     # ------------------------------------------------------------ invariant
     def check(self) -> None:
         """THE conservation law — the one code path per host that proves

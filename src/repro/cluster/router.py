@@ -214,17 +214,22 @@ class Router:
         return rid
 
     def _mask_lifecycle(self, engines: dict) -> dict:
-        """Drop replicas on retiring (or already-retired) hosts from the
-        candidate set — EVERY tier of every policy skips them, since a
-        retiring host accepts no new work.  Falls back to the full set if
-        the whole fleet is retiring (an arrival must route somewhere)."""
+        """Drop replicas on retiring (or already-retired) hosts — and on
+        hosts still PROVISIONING (booted but not yet ready) — from the
+        candidate set: EVERY tier of every policy skips them, since a
+        retiring host accepts no new work and a booting one cannot serve
+        it yet.  Falls back to the full set if nothing survives the mask
+        (an arrival must route somewhere)."""
         f = self.fleet
-        if f is None or not (getattr(f, "retiring", None)
-                             or getattr(f, "retired", None)):
+        if f is None:
+            return engines
+        ready = getattr(f, "host_ready", lambda h: True)
+        if not (getattr(f, "retiring", None) or getattr(f, "retired", None)
+                or getattr(f, "_ready_at", None)):
             return engines
         live = {r: e for r, e in engines.items()
                 if (h := f.host_of(r)) is None
-                or (h in f.brokers and h not in f.retiring)}
+                or (h in f.brokers and h not in f.retiring and ready(h))}
         return live or engines
 
     def route(self, req, engines: dict, backlog: Optional[dict] = None

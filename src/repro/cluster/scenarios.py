@@ -38,6 +38,14 @@ report row each — this module defines a bank of ``FleetSim`` scenarios:
                                              quiet streak and DRAINS its
                                              snapshot pool to peers over
                                              the contended interconnect
+  dedup       dedup_prefix,                  many functions sharing one
+              dedup_baseline                 long common KV prefix:
+                                             content-addressed manifests
+                                             charge each shared page once
+                                             (refcounted, cross-tenant)
+                                             and migrations move only
+                                             missing pages — vs the
+                                             duplicated opaque baseline
 
 Every scenario is a pure function of ``(name, seed)``: arrivals come
 from per-tenant ``tracegen`` streams (independent child rngs), replicas
@@ -85,6 +93,11 @@ ROW_SCHEMA = (
     "snapshot_migrations", "host_boots", "host_retires",
     "hedges", "routes", "host_seconds",
     "free_units_end", "device_units_end",
+    # content-addressed pool surface (PR 9): units the pools actually
+    # CHARGE at end of run (unique pages once) vs what the manifests
+    # reference, and the bytes migrations actually moved (missing pages
+    # only) — 1.0 / equal-to-referenced for unpaged scenarios
+    "unique_snapshot_units", "dedup_ratio", "migrated_snapshot_bytes",
 )
 
 # fields holding milliseconds/seconds — the CI regression gate treats
@@ -123,7 +136,7 @@ class ModelReplica:
     def __init__(self, rid: str, broker: HostMemoryBroker, host_id: str,
                  *, units: int, min_rows: int = 1,
                  tenant: Optional[str] = None, straggle: float = 1.0,
-                 devices: int = 1):
+                 devices: int = 1, pager: Optional[Callable] = None):
         assert units >= min_rows >= 1
         assert devices >= 1 and broker.topology.n_devices == devices, \
             f"{rid}: {devices} KV shards on a " \
@@ -134,6 +147,12 @@ class ModelReplica:
         self.tenant = tenant or ""
         self.straggle = straggle         # work-cost multiplier (hedge scn)
         self.devices = devices           # units (KV shards) per row
+        # content-addressed capture: ``pager(prof, toks, devices)`` maps
+        # a profile's KV to symbolic page specs (dedup scenarios); the
+        # replica tracks which digests it has materialized so a later
+        # restore of shared pages is copy-on-write (cheaper)
+        self.pager = pager
+        self._mapped: set = set()
         self.rows = units
         self.min_rows = min_rows
         self.now = 0.0
@@ -271,8 +290,17 @@ class ModelReplica:
                 else None
             if snap is not None:
                 owed = snap.claim_copy()      # first remote restore pays
+                cost = self.RESTORE_S
+                if getattr(snap, "pages", None) is not None:
+                    # CoW restore: already-materialized pages remap for
+                    # free; the floor keeps restore strictly above warm
+                    specs = self.broker.snapshot_page_specs(key)
+                    new = sum(1 for d, _u, _b, _p in specs
+                              if d not in self._mapped)
+                    cost *= max(new / len(specs), 0.25)
+                    self._mapped.update(d for d, _u, _b, _p in specs)
                 path = "remote_restore" if owed > 0.0 else "restore"
-                self._start(req, path, self.RESTORE_S + owed)
+                self._start(req, path, cost + owed)
             else:
                 self._start(req, "cold",
                             self.COLD_S_TOK * req.profile.prompt_tokens)
@@ -348,12 +376,17 @@ class ModelReplica:
         # capture would be unrestorable and is never offered to the pool)
         frags = tuple(("kv", prof, d) for d in range(self.devices)) \
             if self.devices > 1 else None
+        pages = self.pager(prof, toks, self.devices) if self.pager \
+            else None
         if self.broker.snapshot_put(prof, units=self.devices,
                                     payload=("kv", prof),
                                     tokens=toks,
                                     nbytes=toks * self.BYTES_PER_TOKEN,
                                     replica_id=self.rid,
-                                    tenant=self.tenant, fragments=frags):
+                                    tenant=self.tenant, fragments=frags,
+                                    pages=pages):
+            if pages is not None:
+                self._mapped.update(d for d, _u, _b, _p in pages)
             self.captures += 1
             self.now += self.CAPTURE_S * self.straggle
 
@@ -434,7 +467,8 @@ def _requests(streams: list[tuple[str, list]]) -> list[Request]:
 def _build(hosts: dict[str, list], *, budget: int, pool_units: int,
            tenants: Optional[dict[str, int]] = None,
            policy: str = "drain_weighted", seed: int = 0,
-           route_fn: Optional[Callable] = None, devices: int = 1):
+           route_fn: Optional[Callable] = None, devices: int = 1,
+           pager: Optional[Callable] = None):
     """One broker per host (shared tenant sub-budget split), replicas
     placed per spec, router wired to the fleet scheduler.  ``hosts``:
     host id -> list of (rid, units, tenant, straggle, min_rows).
@@ -460,7 +494,7 @@ def _build(hosts: dict[str, list], *, budget: int, pool_units: int,
         engines[h] = {rid: ModelReplica(rid, b, h, units=units,
                                         tenant=tenant, straggle=straggle,
                                         min_rows=min_rows,
-                                        devices=devices)
+                                        devices=devices, pager=pager)
                       for rid, units, tenant, straggle, min_rows in reps}
     router = Router(policy=policy, seed=seed, route_fn=route_fn,
                     fleet=sched)
@@ -469,11 +503,14 @@ def _build(hosts: dict[str, list], *, budget: int, pool_units: int,
 
 
 def _preseed_snapshots(sched: FleetScheduler, profs: dict, *,
-                       host: Optional[str] = None) -> None:
+                       host: Optional[str] = None,
+                       pager: Optional[Callable] = None) -> None:
     """Seed the pool with restorable snapshots for ``profs`` (first host
     by default): the deterministic stand-in for a previous epoch's
     captures — fairness scenarios start with protected warm state, SLO
-    scenarios give the tight tier a restore path from arrival one."""
+    scenarios give the tight tier a restore path from arrival one.
+    ``pager`` preseeds content-addressed manifests instead of opaque
+    payloads (the dedup family)."""
     h = host if host is not None else sorted(sched.brokers)[0]
     b = sched.brokers[h]
     for name, p in sorted(profs.items()):
@@ -481,8 +518,30 @@ def _preseed_snapshots(sched: FleetScheduler, profs: dict, *,
                             tokens=p.prompt_tokens,
                             nbytes=p.prompt_tokens
                             * ModelReplica.BYTES_PER_TOKEN,
-                            tenant=p.tenant)
+                            tenant=p.tenant,
+                            pages=pager(name, p.prompt_tokens, 1)
+                            if pager else None)
         assert ok, f"preseed snapshot for {name} did not fit"
+
+
+# common-prefix KV model for the dedup family: every function's prompt
+# opens with the same ``_COMMON_TOK``-token system preamble (two shared
+# pages — only the first carries the entry's unit charge, so the page
+# sum still equals the manifest's units), and the function-specific tail
+# rides a per-profile page with the remaining bytes.  Digests are
+# symbolic (content IS identity here), parameterized by the device count
+# so a sharded variant never collides with the flat one.
+_COMMON_TOK = 6          # <= the smallest profile prompt (html: 8)
+
+
+def _prefix_pager(prof: str, toks: int, devices: int) -> list:
+    assert toks >= _COMMON_TOK, (prof, toks)
+    bpt = ModelReplica.BYTES_PER_TOKEN
+    half = _COMMON_TOK * bpt // 2
+    return [(f"pfx0.d{devices}", devices, half, ("pg", "pfx", 0)),
+            (f"pfx1.d{devices}", 0, half, ("pg", "pfx", 1)),
+            (f"tail.{prof}", 0, (toks - _COMMON_TOK) * bpt,
+             ("pg", "tail", prof))]
 
 
 # ------------------------------------------------------------ report row
@@ -515,6 +574,8 @@ def _row(name: str, family: str, seed: int, policy: str, sim: FleetSim,
     order_units = 0
     free_end = {}
     device_end = {}
+    unique_end = 0
+    referenced_end = 0
     # retired hosts leave sched.brokers but their (emptied) brokers stay
     # on the sim — fold them back in so squeeze/order accounting covers
     # the whole run and conservation is visible end-to-end
@@ -529,6 +590,9 @@ def _row(name: str, family: str, seed: int, policy: str, sim: FleetSim,
         free_end[h] = b.free_units
         device_end[h] = [b.ledger.free_dev(d)
                          for d in range(b.ledger.n_devices)]
+        unique_end += b.snapshot_units()
+        referenced_end += b.snapshots.referenced_units \
+            if b.snapshots is not None else 0
     row = {
         "scenario": name,
         "family": family,
@@ -560,6 +624,10 @@ def _row(name: str, family: str, seed: int, policy: str, sim: FleetSim,
         "host_seconds": round(sim.virtual_now(), 9),
         "free_units_end": free_end,
         "device_units_end": device_end,
+        "unique_snapshot_units": unique_end,
+        "dedup_ratio": round(unique_end / referenced_end, 6)
+        if referenced_end else 1.0,
+        "migrated_snapshot_bytes": sum(r.nbytes for r in sched.migrations),
     }
     assert tuple(row) == ROW_SCHEMA
     return row
@@ -700,6 +768,42 @@ def _scn_mesh_reclaim(name: str, seed: int, *,
                                               stream="app"))])
     sim.run(list(reqs))
     return _row(name, "mesh", seed, "drain_weighted", sim, sched, reqs)
+
+
+def _scn_dedup(name: str, seed: int, *, paged: bool, duration_s: float,
+               rate: float) -> dict[str, Any]:
+    """Two tenants' function sets all sharing the ``_prefix_pager``
+    common preamble, on two hosts with load-only routing (so arrivals
+    keep landing on hosts that never captured the snapshot — exercising
+    cross-host migration).  ``paged=True`` stores content-addressed
+    manifests: the pools charge each shared prefix page ONCE (unique
+    units well below the referenced total, cross-tenant — the first
+    dropped owner reattributes, never strands, its charge) and a
+    migration moves only pages the destination store lacks.
+    ``paged=False`` is the duplicated baseline the acceptance criteria
+    compare against: same trace, every entry opaque and full-price."""
+    tenants = {"acme": 5, "beta": 4}
+    profs = {t: _tenant_profiles(t, ("cnn", "html")) for t in tenants}
+    hosts = {f"h{i}": [(f"h{i}/acme0", 2, "acme", 1.0, 1),
+                       (f"h{i}/beta0", 2, "beta", 1.0, 1)]
+             for i in range(2)}
+    pager = _prefix_pager if paged else None
+    sim, sched = _build(hosts, budget=9, pool_units=4, tenants=tenants,
+                        policy="least_loaded", seed=seed, pager=pager)
+    allp: dict[str, FunctionProfile] = {}
+    for t in sorted(profs):
+        allp.update(profs[t])
+    _preseed_snapshots(sched, allp, pager=pager)
+    streams = []
+    for i, t in enumerate(sorted(tenants)):
+        arr = diurnal_trace(duration_s, rate, period_s=duration_s,
+                            depth=0.8, phase=i * np.pi, seed=seed,
+                            stream=t)
+        streams.append((t, assign_profiles(arr, profs[t], seed=seed,
+                                           stream=t)))
+    reqs = _requests(streams)
+    sim.run(list(reqs))
+    return _row(name, "dedup", seed, "least_loaded", sim, sched, reqs)
 
 
 def _scn_hedged(name: str, seed: int) -> dict[str, Any]:
@@ -849,12 +953,16 @@ SCENARIOS: dict[str, tuple[str, Callable[[int], dict[str, Any]]]] = {
         low_water=4, high_water=12, quiet_ticks=60, max_hosts=3)),
     "retire_drain": ("autoscale", lambda s: _scn_retire_drain(
         "retire_drain", s)),
+    "dedup_prefix": ("dedup", lambda s: _scn_dedup(
+        "dedup_prefix", s, paged=True, duration_s=0.8, rate=100.0)),
+    "dedup_baseline": ("dedup", lambda s: _scn_dedup(
+        "dedup_baseline", s, paged=False, duration_s=0.8, rate=100.0)),
 }
 
 # the smallest scenario per family — the CI fast tier's smoke set
 SMOKE = ("diurnal_smoke", "fairness_smoke", "slo_smoke",
          "scaledown_burst", "hedged_fleet", "mesh_reclaim",
-         "autoscale_smoke")
+         "autoscale_smoke", "dedup_prefix")
 
 
 def run_scenario(name: str, seed: int = 0) -> dict[str, Any]:

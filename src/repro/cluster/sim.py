@@ -230,7 +230,8 @@ class FleetSim:
             hid = f"as{self._boot_seq}"
         broker, engines = self._host_factory(hid)
         assert engines, f"host factory produced no replicas for {hid}"
-        sched.boot_host(hid, broker)
+        sched.boot_host(hid, broker,
+                        ready_delay=self._autoscale.boot_latency_s)
         self.hosts[hid] = dict(engines)
         self._brokers[hid] = broker
         if hasattr(broker, "set_clock"):

@@ -34,6 +34,7 @@ Modes (paper Fig. 8/9/10):
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from collections import deque
 from typing import Any, Optional
@@ -66,8 +67,10 @@ class ServeEngine:
                  mode: str = "hotmem", keep_alive: float = 10.0,
                  headroom: int = 1, seed: int = 0, prewarm: bool = True,
                  broker: Optional[MemoryBroker] = None,
-                 replica_id: str = "r0"):
+                 replica_id: str = "r0",
+                 snapshot_page_bytes: Optional[int] = None):
         assert mode in ("hotmem", "vanilla", "static")
+        assert snapshot_page_bytes is None or snapshot_page_bytes > 0
         if mode == "vanilla":
             assert cfg.family not in ("ssm", "hybrid"), \
                 "paged baseline mirrors token-extensive KV only"
@@ -148,6 +151,13 @@ class ServeEngine:
         self.remote_restore_starts = 0   # restores that paid an inter-host
         #                                  copy (fleet snapshot migration)
         self._prof_tokens: dict[str, int] = {}   # profile -> prompt tokens
+        # content-addressed capture (``snapshot_page_bytes`` set): offered
+        # partitions split into fixed-size pages keyed by content hash,
+        # and ``_mapped`` remembers which page digests this replica has
+        # already materialized (captured or restored) — a later restore
+        # maps those copy-on-write instead of re-copying them
+        self.snapshot_page_bytes = snapshot_page_bytes
+        self._mapped: set[str] = set()
         self._row_req: dict[int, Request] = {}
         self._decode_jit: dict[int, Any] = {}       # rows -> compiled step
         self._prefill_jit: dict[int, Any] = {}      # prompt len -> compiled
@@ -354,19 +364,39 @@ class ServeEngine:
         event is tagged ``source="remote"`` with the origin host and the
         copy charge, and lands between a local restore and a cold
         prefill.  The entry is local thereafter (later restores tag
-        ``source="local"``)."""
+        ``source="local"``).
+
+        Content-addressed entries restore COPY-ON-WRITE: pages whose
+        digest this replica already materialized (an earlier capture or
+        restore) are remapped, not re-copied — the charged wall scales by
+        the fraction of pages actually new here, and the event reports
+        ``pages_total`` / ``pages_shared``."""
         req.partition = row
         req.admitted_s = self.now
         req.state = State.PREFILL
         copy_s = snap.claim_copy() if hasattr(snap, "claim_copy") else 0.0
+        specs = self.broker.snapshot_page_specs(snap.key) \
+            if getattr(snap, "pages", None) is not None else None
         t0 = time.perf_counter()
-        row_caches = jax.tree.map(jnp.asarray, snap.payload)
+        row_caches = jax.tree.map(jnp.asarray, snap.payload) \
+            if specs is None else self._reassemble(snap.payload, specs)
         self.caches = M.cache_write_row(self.caches, row_caches, row)
         jax.block_until_ready(jax.tree.leaves(self.caches)[0])
-        wall = time.perf_counter() - t0 + copy_s
-        self.now += wall
+        wall = time.perf_counter() - t0
         detail = {"rid": req.rid, "key": snap.key, "bytes": snap.nbytes,
                   "row": row, "source": "remote" if copy_s else "local"}
+        if specs is not None:
+            total = len(specs)
+            shared = sum(1 for d, _u, _b, _p in specs if d in self._mapped)
+            # CoW: only the new pages pay the host->device copy; shared
+            # pages are a mapping (the measured wall is the full row
+            # write, so scale it by the new-page fraction)
+            wall *= (total - shared) / total if total else 1.0
+            self._mapped.update(d for d, _u, _b, _p in specs)
+            detail["pages_total"] = total
+            detail["pages_shared"] = shared
+        wall += copy_s
+        self.now += wall
         if copy_s:
             detail["origin"] = snap.origin_host
             detail["copy_s"] = copy_s
@@ -427,7 +457,14 @@ class ServeEngine:
         a real device gather + device->host copy, charged to this
         replica's clock — paid only when the broker has room (brokers
         without a pool decline for free, keeping the discard path
-        byte-identical to pre-snapshot behavior)."""
+        byte-identical to pre-snapshot behavior).
+
+        With ``snapshot_page_bytes`` set the readout is split into
+        content-addressed pages (``_paginate``) before the put, so the
+        pool charges only pages its store does not already hold.  The
+        room probe stays the conservative all-pages-new check — it runs
+        BEFORE the device readout, when the page digests do not exist
+        yet, so it must not depend on them."""
         if self.mode != "hotmem":
             return False            # prefix-KV rows are a hotmem concept
         units = self.spec.blocks_per_partition
@@ -437,16 +474,65 @@ class ServeEngine:
         payload = jax.device_get(M.cache_read_row(self.caches, row))
         wall = time.perf_counter() - t0
         nbytes = int(sum(x.nbytes for x in jax.tree.leaves(payload)))
+        pages = None
+        if self.snapshot_page_bytes is not None:
+            payload, pages = self._paginate(payload, units)
         ok = self.broker.snapshot_put(
             prof_name, units=units, payload=payload,
             tokens=self._prof_tokens.get(prof_name, 0), nbytes=nbytes,
-            replica_id=self.replica_id)
+            replica_id=self.replica_id, pages=pages)
         if ok:
+            if pages is not None:
+                self._mapped.update(d for d, _u, _b, _p in pages)
             self.now += wall
             self.events.append(StepEvent(self.now, "snapshot", wall,
                                          {"key": prof_name, "rid": rid,
                                           "bytes": nbytes, "row": row}))
         return ok
+
+    def _paginate(self, payload, units: int) -> tuple[Any, list]:
+        """Split a copied-out row payload into fixed-size content-
+        addressed pages: the flattened leaves' bytes are chunked at
+        ``snapshot_page_bytes`` and each chunk keyed by its content hash
+        (with the page's unit charge folded into the key, so one digest
+        always means one (content, units) pair — the store asserts that).
+        The entry's ``units`` are spread over the pages in whole mesh
+        stripes so ANY subset of pages charges balanced across devices;
+        short manifests may carry zero-unit tail pages.  Returns the
+        manifest-form payload (treedef + leaf metadata, enough for
+        ``_reassemble``) and the page spec list."""
+        leaves, treedef = jax.tree.flatten(payload)
+        leaves = [np.ascontiguousarray(x) for x in leaves]
+        blob = b"".join(x.tobytes() for x in leaves)
+        metas = tuple((tuple(x.shape), str(x.dtype)) for x in leaves)
+        pb = self.snapshot_page_bytes
+        chunks = [blob[i:i + pb] for i in range(0, len(blob), pb)] or [b""]
+        g = self._n_dev
+        assert units % g == 0, (units, g)        # asserted at boot too
+        base, rem = divmod(units // g, len(chunks))
+        specs = []
+        for i, chunk in enumerate(chunks):
+            u = (base + (1 if i < rem else 0)) * g
+            digest = "%s-%d" % (hashlib.sha256(chunk).hexdigest()[:16], u)
+            specs.append((digest, u, len(chunk), chunk))
+        return ("paged", treedef, metas), specs
+
+    def _reassemble(self, payload, specs: list):
+        """Rebuild a device row tree from a paged entry: concatenate the
+        manifest's page payloads back into the flat byte blob and carve
+        it by the captured leaf metadata."""
+        kind, treedef, metas = payload
+        assert kind == "paged", kind
+        blob = b"".join(p for _d, _u, _b, p in specs)
+        leaves, off = [], 0
+        for shape, dtype in metas:
+            arr = np.frombuffer(blob, dtype=dtype,
+                                count=int(np.prod(shape)),
+                                offset=off).reshape(shape)
+            off += arr.nbytes
+            leaves.append(jnp.asarray(arr))
+        assert off == len(blob), (off, len(blob))
+        return jax.tree.unflatten(treedef, leaves)
 
     def _recycle_idle(self) -> None:
         """Recycle idle containers past keep-alive: release their

@@ -1,0 +1,394 @@
+"""Content-addressed snapshot store (PR 9): refcounted ledger charge,
+copy-on-write restore, dedup-aware migration.
+
+The properties pinned down:
+
+  (a) ``PageStore`` refcounts: a page charges on FIRST reference only
+      (the referencing tenant becomes owner), dedup hits are free,
+      deref returns exactly the ledger flow the broker must apply
+      (freed / reattributed-to-min-surviving-tenant / shared), and a
+      digest collision with different content fails loudly;
+  (b) broker walks: overlapping manifests across tenants charge unique
+      units once, dropping the owner's entry REATTRIBUTES the shared
+      page's charge instead of stranding or double-releasing it, and
+      squeezing an entry whose pages another manifest still references
+      frees only the newly-unreferenced units — conservation re-proved
+      after every event;
+  (c) migration moves only the pages the destination LACKS: a second
+      manifest sharing pages with one already migrated pays only its
+      tail, a fully-shared manifest moves zero bytes (no transfer, no
+      contention), and the unpaged path still moves the full payload;
+  (d) ``page_size=None`` is the legacy pool bit-exactly: an unpaged
+      scenario row replays byte-identically against the committed
+      ``BENCH_6.json`` baseline, and the dedup scenario family shows
+      unique units <= 50% of the duplicated baseline with strictly
+      fewer migrated bytes and warm < restore < cold TTFT;
+  (e) (slow) a real ``ServeEngine`` captures page manifests, restores
+      reassemble them bit-exactly, and a restore whose pages are
+      already mapped pays only the copy wall (CoW) — strictly below
+      the same restore on a replica that has never seen the pages.
+"""
+import itertools
+import json
+import os
+from collections import deque
+
+import pytest
+
+from repro.cluster import FleetScheduler, HostMemoryBroker
+from repro.cluster.snapshots import PageStore
+from repro.core.arena import ArenaSpec
+from repro.serving.request import PROFILES, Request
+
+from conftest import fake_clock as _fake_clock
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks")
+
+
+# --------------------------------------------------- (a) PageStore flows
+
+
+def test_page_charges_once_and_owner_is_first_referencing_tenant():
+    s = PageStore()
+    assert s.ref("A", units=2, nbytes=64, payload=("pg", 0), tenant="t0")
+    assert not s.ref("A", units=2, nbytes=64, payload=("pg", 0),
+                     tenant="t1")            # dedup hit: no ledger flow
+    assert s.dedup_hits == 1
+    assert s.unique_units == 2 and len(s) == 1
+    assert s.get("A").owner == "t0" and s.get("A").refs == 2
+    assert s.owner_units() == {"t0": 2}
+    s.check_invariants()
+    # non-owner deref: page stays, still owned and charged to t0
+    assert s.deref("A", "t1") == ("shared", 0, "", "")
+    # last deref frees: credit the OWNER, not the last dereferencer
+    assert s.deref("A", "t0") == ("freed", 2, "t0", "")
+    assert "A" not in s and s.unique_units == 0
+    s.check_invariants()
+
+
+def test_owner_deref_reattributes_to_min_surviving_tenant():
+    s = PageStore()
+    s.ref("A", units=3, nbytes=64, payload=("pg", 0), tenant="t1")
+    s.ref("A", units=3, nbytes=64, payload=("pg", 0), tenant="t2")
+    s.ref("A", units=3, nbytes=64, payload=("pg", 0), tenant="t0")
+    # owner t1's last reference drops while t0/t2 still hold the page:
+    # the charge moves deterministically to min(surviving) == t0
+    assert s.deref("A", "t1") == ("reattributed", 3, "t1", "t0")
+    assert s.get("A").owner == "t0"
+    s.check_invariants()
+    assert s.deref("A", "t2") == ("shared", 0, "", "")
+    assert s.deref("A", "t0") == ("freed", 3, "t0", "")
+
+
+def test_digest_collision_and_foreign_deref_fail_loudly():
+    s = PageStore()
+    s.ref("A", units=1, nbytes=64, payload=("pg", 0), tenant="t0")
+    with pytest.raises(AssertionError, match="collision"):
+        s.ref("A", units=2, nbytes=64, payload=("pg", 0), tenant="t0")
+    with pytest.raises(AssertionError, match="non-referencing"):
+        s.deref("A", "t9")
+    s.check_invariants()                     # failed ops mutated nothing
+
+
+def test_missing_preserves_order_and_collapses_duplicates():
+    s = PageStore()
+    s.ref("B", units=1, nbytes=8, payload=("pg", 1), tenant="t0")
+    assert s.missing(["C", "B", "A", "C", "A"]) == ["C", "A"]
+    assert s.missing(["B"]) == []
+
+
+# ------------------------------------------- (b) broker conservation walks
+
+
+def _mk_paged_broker(budget=16, pool=8, tenants=None):
+    clock = itertools.count(1)
+    return HostMemoryBroker(budget, clock=lambda: float(next(clock)),
+                            snapshot_pool_units=pool,
+                            tenants=tenants)
+
+
+def test_overlapping_manifests_charge_unique_units_once():
+    b = _mk_paged_broker(tenants={"t0": 8, "t1": 8})
+    pa = ("A", 2, 100, ("pg", "A"))
+    pb = ("B", 1, 50, ("pg", "B"))
+    pc = ("C", 1, 50, ("pg", "C"))
+    assert b.snapshot_put("k0", units=3, pages=[pa, pb], tenant="t0")
+    b.check_invariants()
+    assert b.snapshot_units() == 3
+    assert b.snapshot_put("k1", units=3, pages=[pa, pc], tenant="t1")
+    b.check_invariants()
+    # A deduped: only C newly charged; manifests still reference 6
+    assert b.snapshot_units() == 4
+    assert b.snapshots.referenced_units == 6
+    assert b.ledger.tenant_snapshot("t0") == 3   # owns A and B
+    assert b.ledger.tenant_snapshot("t1") == 1   # owns C only
+    # dropping the OWNER's manifest: B freed (credit t0), A reattributed
+    # to t1 (still referenced by k1) — nothing stranded, nothing double-
+    # released, and k1 stays restorable
+    b.snapshot_drop("k0")
+    b.check_invariants()
+    assert b.snapshot_units() == 3
+    assert b.ledger.tenant_snapshot("t0") == 0
+    assert b.ledger.tenant_snapshot("t1") == 3
+    assert b.snapshot_lookup("k1") is not None
+    assert b.missing_pages(["A", "C"]) == []
+    b.snapshot_drop("k1")
+    b.check_invariants()
+    assert b.snapshot_units() == 0 and len(b.snapshots.pages) == 0
+
+
+def test_squeeze_of_shared_manifest_frees_only_unreferenced_units():
+    """Grant pressure squeezes a manifest whose big page another entry
+    still references: the squeeze frees only the tail's units (the
+    shared page stays charged — once), and the survivor restores."""
+    clock = itertools.count(1)
+    broker = HostMemoryBroker(12, async_reclaim=True,
+                              clock=lambda: float(next(clock)),
+                              snapshot_pool_units=8)
+    sink = deque()
+    broker.register("r", 4, order_sink=sink.append, mode="hotmem",
+                    load=lambda: 0)
+    shared = ("S", 4, 200, ("pg", "S"))
+    assert broker.snapshot_put("k0", units=5,
+                               pages=[shared, ("T0", 1, 8, ("pg", 0))])
+    assert broker.snapshot_put("k1", units=5,
+                               pages=[shared, ("T1", 1, 8, ("pg", 1))])
+    broker.check_invariants()
+    assert broker.snapshot_units() == 6          # 4 + 1 + 1, S once
+    assert broker.free_units == 2
+    # deficit 3: free 2 + squeeze.  Dropping BOTH entries only frees 6
+    # units total; the plan prices each drop by its NEWLY-unreferenced
+    # units (k0 -> 1, then k1 -> 5), never by the referenced sum
+    g = broker.request_grant("r", 5)
+    broker.check_invariants()
+    assert g.granted == 5 and g.done and not sink
+    assert broker.snapshot_units() == 0
+    assert len(broker.snapshots.pages) == 0
+
+
+def test_paged_room_probe_agrees_with_put_when_fully_shared():
+    """A manifest whose every page is already stored needs zero new
+    units: room says yes even with a full free pool, and put charges
+    nothing."""
+    b = _mk_paged_broker(budget=8, pool=4)
+    pg = ("A", 4, 64, ("pg", "A"))
+    assert b.snapshot_put("k0", units=4, pages=[pg])
+    b.register("r", 4)                           # free pool now 0
+    assert b.free_units == 0
+    assert b.snapshot_room("k1", 4, pages=[pg])
+    assert b.snapshot_put("k1", units=4, pages=[pg])
+    b.check_invariants()
+    assert b.snapshot_units() == 4               # still one charge
+    assert b.snapshots.pages.dedup_hits == 1
+    assert b.snapshots.referenced_units == 8
+
+
+# ------------------------------------------ (c) dedup-aware migration
+
+
+def _mk_fleet(pool=8, bandwidth=100.0):
+    sched = FleetScheduler(bandwidth_bytes_per_s=bandwidth,
+                           link_latency_s=0.0, clock=_fake_clock())
+    for h in ("h0", "h1"):
+        sched.add_host(h, HostMemoryBroker(
+            16, clock=_fake_clock(), snapshot_pool_units=pool))
+    return sched
+
+
+def test_migration_moves_only_pages_the_destination_lacks():
+    sched = _mk_fleet()
+    b0 = sched.brokers["h0"]
+    pp = ("P", 1, 100, ("pg", "P"))
+    pq = ("Q", 1, 50, ("pg", "Q"))
+    pr = ("R", 1, 50, ("pg", "R"))
+    assert b0.snapshot_put("k0", units=2, nbytes=150,
+                           payload=("kv", 0), pages=[pp, pq])
+    assert b0.snapshot_put("k1", units=2, nbytes=150,
+                           payload=("kv", 1), pages=[pp, pr])
+    rec0 = sched.migrate_snapshot("k0", "h1")    # cold dest: both pages
+    assert rec0.nbytes == 150
+    assert rec0.copy_seconds == pytest.approx(1.5)
+    sched.check_invariants()
+    # P already landed with k0 — k1's transfer carries only R (its
+    # copy wall still contends with rec0's transfer where they overlap)
+    rec1 = sched.migrate_snapshot("k1", "h1")
+    assert rec1.nbytes == 50
+    assert rec1.copy_seconds < rec0.copy_seconds
+    b1 = sched.brokers["h1"]
+    assert b1.snapshot_restorable("k0") and b1.snapshot_restorable("k1")
+    assert b1.snapshot_units() == 3              # P, Q, R — once each
+    b1.check_invariants()
+    # the unpaged path still pays full payload bytes for the same size
+    assert b0.snapshot_put("k2", units=2, nbytes=150, payload=("kv", 2))
+    rec2 = sched.migrate_snapshot("k2", "h1")
+    assert rec2.nbytes == 150
+
+
+def test_fully_shared_manifest_migrates_zero_bytes():
+    """Warm state the destination already holds page-for-page moves as
+    pure metadata: zero bytes, zero copy wall, no interconnect transfer
+    to contend with."""
+    sched = _mk_fleet()
+    b0 = sched.brokers["h0"]
+    pages = [("P", 1, 100, ("pg", "P")), ("Q", 1, 50, ("pg", "Q"))]
+    assert b0.snapshot_put("k0", units=2, nbytes=150,
+                           payload=("kv", 0), pages=list(pages))
+    sched.migrate_snapshot("k0", "h1")
+    assert b0.snapshot_put("k3", units=2, nbytes=150,
+                           payload=("kv", 3), pages=list(pages))
+    before = len(sched._inflight)
+    rec = sched.migrate_snapshot("k3", "h1")
+    assert rec is not None and rec.nbytes == 0
+    assert rec.copy_seconds == 0.0
+    assert len(sched._inflight) == before        # nothing on the wire
+    assert sched.brokers["h1"].snapshot_restorable("k3")
+    sched.check_invariants()
+
+
+def test_drain_host_migrates_paged_entries_dedup_aware():
+    sched = _mk_fleet()
+    b0, b1 = sched.brokers["h0"], sched.brokers["h1"]
+    pages = [("P", 1, 100, ("pg", "P")), ("Q", 1, 50, ("pg", "Q"))]
+    assert b0.snapshot_put("k0", units=2, nbytes=150,
+                           payload=("kv", 0), pages=list(pages))
+    assert b1.snapshot_put("peer", units=2, nbytes=150,
+                           payload=("kv", 9), pages=list(pages))    # dest already holds P, Q
+    sched.begin_retire("h0")
+    stats = sched.drain_host("h0")
+    assert stats == {"migrated": 1, "deferred": 0, "discarded": 0}
+    assert sched.migrations[-1].nbytes == 0      # fully shared: metadata
+    assert sched.finish_retire("h0")
+    assert b1.snapshot_units() == 2              # one charge for P + Q
+    b1.check_invariants()
+
+
+# ----------------------------- (d) unpaged bit-identity + dedup scenarios
+
+
+def test_unpaged_scenario_row_bit_identical_to_committed_baseline():
+    """The ``page_size=None`` regression pin: the refactor must not
+    perturb the legacy pool by a single bit, so an unpaged bank row is
+    compared FIELD-EXACT (not within regression slack) against the
+    committed baseline."""
+    from repro.cluster.scenarios import run_scenario
+    with open(os.path.join(BENCH_DIR, "BENCH_6.json")) as f:
+        base = json.load(f)
+    old = base["diurnal_smoke"]
+    row = run_scenario("diurnal_smoke", seed=old["seed"])
+    assert row == old
+
+
+def test_dedup_scenario_halves_units_and_migrated_bytes():
+    """The acceptance comparison: same trace, same budgets — paged
+    capture keeps <= 50% of the duplicated baseline's snapshot charge
+    and strictly fewer migrated bytes, with the TTFT ordering
+    warm < restore < cold intact."""
+    from repro.cluster.scenarios import run_scenario
+    paged = run_scenario("dedup_prefix", seed=0)
+    flat = run_scenario("dedup_baseline", seed=0)
+    assert paged["unique_snapshot_units"] * 2 \
+        <= flat["unique_snapshot_units"]
+    assert paged["dedup_ratio"] < 1.0 == flat["dedup_ratio"]
+    assert paged["migrated_snapshot_bytes"] \
+        < flat["migrated_snapshot_bytes"]
+    assert 0.0 <= paged["warm_ttft_ms"] < paged["restore_ttft_ms"] \
+        < paged["cold_ttft_ms"]
+    # the paged run replays bit-identically for a fixed seed
+    again = run_scenario("dedup_prefix", seed=0)
+    assert json.dumps(paged, sort_keys=True) \
+        == json.dumps(again, sort_keys=True)
+
+
+# --------------------------------------------- (e) engine CoW (slow)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+    from repro.configs.base import get_config, reduced
+    from repro.models import model as M
+    cfg = reduced(get_config("qwen2-7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    spec = ArenaSpec.from_model(cfg, partition_tokens=128, n_partitions=8,
+                                block_tokens=32)
+    return cfg, params, spec
+
+
+def _run_one(eng, rid, prof="cnn"):
+    eng.submit(Request(rid=rid, profile=PROFILES[prof], submit_s=eng.now))
+    empty = deque()
+    while eng.active or eng.pending:
+        eng._tick(empty)
+    return next(r for r in eng.done if r.rid == rid)
+
+
+def _expire(eng):
+    eng.now += eng.keep_alive + 1.0
+    eng._recycle_idle()
+
+
+@pytest.mark.slow
+def test_engine_paged_capture_and_cow_restore(setup):
+    """Capture splits the partition into content pages; a replica that
+    already maps every page restores paying ONLY the copy wall, strictly
+    below a replica materializing the pages for the first time."""
+    from repro.serving.engine import ServeEngine
+    cfg, params, spec = setup
+    bpp = spec.blocks_per_partition
+    broker = HostMemoryBroker(budget_units=12 * bpp,
+                              snapshot_pool_units=4 * bpp)
+    a = ServeEngine(cfg, params, spec, keep_alive=2.0, seed=0,
+                    broker=broker, replica_id="A",
+                    snapshot_page_bytes=4096)
+    b = ServeEngine(cfg, params, spec, keep_alive=2.0, seed=1,
+                    broker=broker, replica_id="B",
+                    snapshot_page_bytes=4096)
+    _run_one(a, "c0")
+    _expire(a)
+    broker.check_invariants()
+    snap = broker.snapshots.peek("cnn")
+    assert snap is not None and snap.pages is not None
+    assert len(snap.pages) > 1                   # actually paginated
+    specs = broker.snapshot_page_specs("cnn")
+    assert [d for d, _u, _nb, _pl in specs] == list(snap.pages)
+    assert sum(u for _d, u, _nb, _pl in specs) == snap.units == bpp
+
+    # B never saw these pages: full materialization + copy wall
+    _run_one(b, "r0")
+    ev_b = next(e for e in b.events if e.kind == "restore")
+    assert ev_b.detail["pages_total"] == len(specs)
+    assert ev_b.detail["pages_shared"] == 0
+    # A captured them, so its own restore maps every page CoW
+    _run_one(a, "r1")
+    ev_a = next(e for e in a.events if e.kind == "restore")
+    assert ev_a.detail["pages_shared"] == ev_a.detail["pages_total"]
+    # every page already mapped and no cross-host copy owed: the CoW
+    # restore is a pure remap — zero wall, strictly below B's copy
+    assert 0.0 <= ev_a.wall_s < ev_b.wall_s
+    # both restores decoded to completion off the reassembled KV
+    assert a.restore_starts == 1 and b.restore_starts == 1
+    broker.check_invariants()
+
+
+@pytest.mark.slow
+def test_engine_without_page_size_captures_legacy_entries(setup):
+    """``snapshot_page_bytes=None`` (the default) never touches the page
+    store: entries carry a plain payload, restore detail has no page
+    counters, and the pool charge equals the manifest-free units."""
+    from repro.serving.engine import ServeEngine
+    cfg, params, spec = setup
+    bpp = spec.blocks_per_partition
+    broker = HostMemoryBroker(budget_units=12 * bpp,
+                              snapshot_pool_units=4 * bpp)
+    eng = ServeEngine(cfg, params, spec, keep_alive=2.0, seed=0,
+                      broker=broker, replica_id="A")
+    _run_one(eng, "c0")
+    _expire(eng)
+    snap = broker.snapshots.peek("cnn")
+    assert snap is not None and snap.pages is None
+    assert len(broker.snapshots.pages) == 0
+    assert broker.snapshot_units() == bpp
+    _run_one(eng, "r0")
+    ev = next(e for e in eng.events if e.kind == "restore")
+    assert "pages_total" not in ev.detail
+    broker.check_invariants()

@@ -233,6 +233,51 @@ def test_autoscale_policy_validates_thresholds():
     with pytest.raises(AssertionError):
         AutoscalePolicy(low_water=0, high_water=1, quiet_ticks=1,
                         min_hosts=4, max_hosts=2)
+    with pytest.raises(AssertionError):
+        AutoscalePolicy(low_water=0, high_water=1, quiet_ticks=1,
+                        boot_latency_s=-0.5)
+
+
+def test_boot_latency_gates_routing_but_not_capacity():
+    """A freshly booted host is provisioning for ``ready_delay`` virtual
+    seconds: it COUNTS toward fleet capacity at once (so the autoscaler
+    does not stampede more boots for the same deficit) and accepts
+    placements, but the router masks its replicas until the clock
+    passes its ready time."""
+    t = [0.0]
+    sched = FleetScheduler(clock=lambda: t[0])
+    sched.add_host("h0", HostMemoryBroker(8, clock=_fake_clock()))
+    sched.brokers["h0"].register("a", 4)
+    sched.placements["a"] = "h0"
+    sched.boot_host("h1", HostMemoryBroker(8, clock=_fake_clock()),
+                    ready_delay=5.0)
+    assert sched.host_boots == 1
+    assert sched.host_ready("h0") and not sched.host_ready("h1")
+    assert sched.report()["booting"] == ["h1"]
+    # capacity and placement see the booting host immediately
+    assert sched.capacity("h1") == 8
+    assert sched.place("b", 2, policy="spread") == "h1"
+    # ...but the router does not route to its replicas yet
+    r = Router("least_loaded", fleet=sched)
+    engines = {"a": _FakeEngine(5), "b": _FakeEngine(0)}
+    assert r.route(_req(), engines) == "a"
+    t[0] = 4.9
+    assert r.route(_req(), engines) == "a"   # still provisioning
+    t[0] = 5.0
+    assert sched.host_ready("h1")            # clock passed ready time
+    assert sched.report()["booting"] == []   # entry self-cleans
+    assert r.route(_req(), engines) == "b"
+    sched.check_invariants()
+
+
+def test_boot_without_delay_is_immediately_routable():
+    sched = _fleet({"h0": 8})
+    sched.boot_host("h1", HostMemoryBroker(8, clock=_fake_clock()))
+    assert sched.host_ready("h1")
+    assert sched.report()["booting"] == []
+    with pytest.raises(AssertionError):
+        sched.boot_host("h2", HostMemoryBroker(8, clock=_fake_clock()),
+                        ready_delay=-1.0)
 
 
 # -------------------------------------------- (c) contention and budget

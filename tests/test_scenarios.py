@@ -39,14 +39,18 @@ MESH_BASELINE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                              "BENCH_7.json")
 AUTOSCALE_BASELINE = os.path.join(os.path.dirname(__file__), "..",
                                   "benchmarks", "BENCH_8.json")
+DEDUP_BASELINE = os.path.join(os.path.dirname(__file__), "..",
+                              "benchmarks", "BENCH_9.json")
 
 
 def _committed_baseline() -> dict:
     """The full committed surface: BENCH_6 (single-device bank) merged
-    with BENCH_7 (the mesh family) and BENCH_8 (the autoscale family) —
-    each scenario lives in exactly one file."""
+    with BENCH_7 (the mesh family), BENCH_8 (the autoscale family), and
+    BENCH_9 (the dedup family) — each scenario lives in exactly one
+    file."""
     merged: dict = {}
-    for path in (BASELINE, MESH_BASELINE, AUTOSCALE_BASELINE):
+    for path in (BASELINE, MESH_BASELINE, AUTOSCALE_BASELINE,
+                 DEDUP_BASELINE):
         with open(path) as f:
             part = json.load(f)
         assert not set(merged) & set(part)
@@ -70,6 +74,7 @@ def test_row_schema_is_pinned():
         "order_units", "snapshot_migrations", "host_boots",
         "host_retires", "hedges", "routes",
         "host_seconds", "free_units_end", "device_units_end",
+        "unique_snapshot_units", "dedup_ratio", "migrated_snapshot_bytes",
     )
     assert set(TIME_FIELDS) < set(ROW_SCHEMA)
     assert set(SMOKE) < set(SCENARIOS)
