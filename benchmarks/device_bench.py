@@ -1,0 +1,222 @@
+"""Device-level snapshot data-plane benchmark (the BENCH_10 trajectory).
+
+Measures the fused capture / restore kernels (``repro.kernels.kv_snapshot``
+via the ``models.model`` row twins) per (config x partition_tokens x rows x
+page size) cell, against each kernel's analytic roofline bytes model:
+
+  capture_us   — one fused gather launch + ONE device->host blob copy
+  restore_us   — ONE host->device blob copy + one fused scatter launch
+  paginate_us  — host-side content hashing of the staged blob (page cells)
+  expected / measured bytes + roofline_ratio — the staged bytes actually
+  moved vs the bytes the CACHE SPECS say one row must move (independent
+  code paths: a silent layout change, padding drift, or a double transfer
+  shows up as ratio drift and fails the gate)
+
+Rows land in ``BENCH_10.json`` under the scenario bank's own
+``--check`` / ``--update-baseline`` discipline (benchmarks.run --device):
+bytes fields must match the baseline EXACTLY, roofline ratios must stay
+within the 2x band, and wall fields get a generous slack
+(``WALL_SLACK``; CI machines are noisy, so this catches order-of-
+magnitude regressions — e.g. accidentally timing interpret mode — not
+scheduling jitter).
+
+Off-TPU the timed impl is ``ref`` (one fused XLA executable; interpret-
+mode tracing overhead would drown the signal — the same discipline the
+serving engine uses); ``--smoke`` instead forces the Pallas kernel in
+interpret mode on one tiny cell and cross-checks it bit-identical
+against ref, so the kernel path itself stays covered in fast CI.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WALL_SLACK = 5.0            # wall fields may drift this much before failing
+RATIO_BAND = 2.0            # roofline expected-vs-measured bytes band
+REPEATS = 5
+
+# (config, partition_tokens, n_rows, page_bytes): attention-only,
+# SSM/hybrid (state + conv leaves), and rglru-hybrid cache trees, each at
+# unpaged and paged data planes, small and larger rows batches
+CELLS = [
+    ("qwen2-7b", 128, 1, None),
+    ("qwen2-7b", 128, 1, 4096),
+    ("qwen2-7b", 256, 2, 16384),
+    ("mamba2-780m", 128, 1, 4096),
+    ("recurrentgemma-2b", 128, 2, None),
+    ("recurrentgemma-2b", 256, 1, 8192),
+]
+SMOKE_CELLS = [("qwen2-7b", 64, 1, 2048)]
+
+
+def cell_name(config: str, t: int, n: int, pb) -> str:
+    return f"{config}/t{t}/rows{n}/page{pb if pb else 'none'}"
+
+
+def _random_caches(cfg, rows: int, t: int, *, seed: int):
+    """Cache tree with non-degenerate contents (cache leaves are zero-
+    initialized, which would make byte-identity checks vacuous and page
+    digests all collide)."""
+    from repro.models import model as M
+    rng = np.random.default_rng(seed)
+    return jax.tree.map(
+        lambda x: jnp.asarray(rng.standard_normal(x.shape), dtype=x.dtype),
+        M.init_caches(cfg, rows, t))
+
+
+def _median_us(fn, repeats=REPEATS) -> float:
+    walls = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        walls.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(walls))
+
+
+def run_cell(config: str, t: int, n: int, page_bytes, *, impl: str) -> dict:
+    from repro.configs.base import get_config, reduced
+    from repro.kernels import kv_snapshot
+    from repro.models import model as M
+    from repro.serving.engine import assemble_pages, paginate_blob
+
+    cfg = reduced(get_config(config))
+    arena_rows = max(4, n + 1)
+    caches = _random_caches(cfg, arena_rows, t, seed=0)
+    layout = M.cache_row_layout(caches)
+    rows = jnp.arange(n, dtype=jnp.int32)
+
+    # -------- capture: fused gather + one device_get (first call warms jit)
+    def capture():
+        blob = M.cache_read_rows(caches, rows, layout=layout, impl=impl)
+        return np.asarray(jax.device_get(blob))
+
+    host = capture()
+    capture_us = _median_us(capture)
+    measured_d2h = int(host.nbytes)
+
+    # -------- restore: one h2d of the blob + fused scatter (warm first)
+    def restore():
+        dev = jnp.asarray(host)
+        out = M.cache_write_rows(caches, dev, rows, layout=layout,
+                                 impl=impl)
+        jax.block_until_ready(out)
+        return out
+
+    restored = restore()
+    restore_us = _median_us(restore)
+    measured_h2d = int(host.nbytes)
+
+    # round-trip must be lossless (every cell, every run)
+    got = np.asarray(jax.device_get(
+        M.cache_read_rows(restored, rows, layout=layout, impl=impl)))
+    assert got.tobytes() == host.tobytes(), "capture/restore round-trip drift"
+
+    # -------- pagination: host-side hashing of the staged byte image
+    blob_u8 = host.view(np.uint8).reshape(-1)
+    paginate_us = None
+    if page_bytes is not None:
+        units = 8  # representative per-partition block charge
+
+        def paginate():
+            return paginate_blob(blob_u8, units, page_bytes)
+
+        specs = paginate()
+        paginate_us = _median_us(paginate)
+        assert assemble_pages(specs).tobytes() == blob_u8.tobytes(), \
+            "paginate/assemble round-trip drift"
+
+    # -------- roofline: bytes the cache SPECS say one row must move
+    expected_rb = kv_snapshot.expected_row_bytes(cfg, t)
+    cap_model = kv_snapshot.capture_cost(expected_rb, n)
+    rest_model = kv_snapshot.restore_cost(expected_rb, n)
+    return {
+        "config": config,
+        "partition_tokens": t,
+        "n_rows": n,
+        "page_bytes": page_bytes,
+        "impl": impl,
+        "row_bytes": int(layout.row_bytes),
+        "blob_bytes": measured_d2h,
+        "expected_bytes": int(cap_model["host_bytes"]),
+        "capture_us": capture_us,
+        "capture_ratio": measured_d2h / cap_model["host_bytes"],
+        "capture_roofline_s": cap_model["memory_s"],
+        "restore_us": restore_us,
+        "restore_ratio": measured_h2d / rest_model["host_bytes"],
+        "restore_roofline_s": rest_model["memory_s"],
+        "paginate_us": paginate_us,
+        "pages": None if page_bytes is None else len(specs),
+    }
+
+
+def run_cells(*, smoke: bool = False) -> dict:
+    """Run the bench grid.  Full mode times the engine's own impl (ref
+    off-TPU); smoke mode forces the Pallas kernel (interpret off-TPU) on
+    one tiny cell and cross-checks it against ref bit-identically."""
+    on_tpu = jax.default_backend() == "tpu"
+    rows = {}
+    if smoke:
+        for config, t, n, pb in SMOKE_CELLS:
+            row = run_cell(config, t, n, pb, impl="pallas")
+            _check_pallas_vs_ref(config, t, n)
+            rows[cell_name(config, t, n, pb)] = row
+        return rows
+    impl = "pallas" if on_tpu else "ref"
+    for config, t, n, pb in CELLS:
+        rows[cell_name(config, t, n, pb)] = run_cell(config, t, n, pb,
+                                                     impl=impl)
+    return rows
+
+
+def _check_pallas_vs_ref(config: str, t: int, n: int) -> None:
+    """The interpret-mode Pallas kernels must stage the exact bytes the
+    ref oracles stage (the smoke gate's correctness half)."""
+    from repro.configs.base import get_config, reduced
+    from repro.models import model as M
+
+    cfg = reduced(get_config(config))
+    caches = _random_caches(cfg, n + 2, t, seed=7)
+    layout = M.cache_row_layout(caches)
+    rows = jnp.arange(n, dtype=jnp.int32)
+    a = np.asarray(jax.device_get(
+        M.cache_read_rows(caches, rows, layout=layout, impl="pallas")))
+    b = np.asarray(jax.device_get(
+        M.cache_read_rows(caches, rows, layout=layout, impl="ref")))
+    assert a.tobytes() == b.tobytes(), "pallas capture != ref capture"
+
+
+def check_rows(rows: dict, baseline: dict) -> list[str]:
+    """Gate the new run against the committed BENCH_10 baseline.  Bytes
+    must match exactly, roofline ratios must sit in the 2x band, walls
+    get WALL_SLACK."""
+    failures = []
+    exact = ("row_bytes", "blob_bytes", "expected_bytes", "pages")
+    ratios = ("capture_ratio", "restore_ratio")
+    walls = ("capture_us", "restore_us", "paginate_us")
+    for name, old in sorted(baseline.items()):
+        new = rows.get(name)
+        if new is None:
+            failures.append(f"{name}: missing from the new run")
+            continue
+        for f in exact:
+            if new.get(f) != old.get(f):
+                failures.append(f"{name}.{f}: {new.get(f)} vs baseline "
+                                f"{old.get(f)} (must match exactly)")
+        for f in ratios:
+            r = new.get(f)
+            if r is None or not (1.0 / RATIO_BAND < r < RATIO_BAND):
+                failures.append(f"{name}.{f}: {r} outside the "
+                                f"{RATIO_BAND}x roofline band")
+        for f in walls:
+            ov, nv = old.get(f), new.get(f)
+            if ov is None:
+                continue
+            if nv is None:
+                failures.append(f"{name}.{f}: vanished (baseline {ov})")
+            elif nv > ov * WALL_SLACK:
+                failures.append(f"{name}.{f}: {nv:.1f}us vs baseline "
+                                f"{ov:.1f}us (> {WALL_SLACK}x slack)")
+    return failures

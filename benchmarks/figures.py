@@ -579,7 +579,119 @@ def _steal_pipeline_rows(mode) -> list[Row]:
     return rows
 
 
+def snapshot_data_plane() -> list[Row]:
+    """Snapshot data plane, fused vs per-leaf (the PR-10 tentpole
+    contrast): capture (device gather + device->host) and restore
+    (host->device + scatter) of one arena row — the fused path stages
+    every leaf through ONE launch and ONE transfer via the kv_snapshot
+    twins, the legacy path pays one dispatch/transfer per leaf."""
+    rng = np.random.default_rng(0)
+    cfg, spec = _cfg_spec(partition_tokens=128, n_partitions=8)
+    caches = jax.tree.map(
+        lambda x: jnp.asarray(rng.standard_normal(x.shape), dtype=x.dtype),
+        M.init_caches(cfg, 8, spec.partition_tokens))
+    layout = M.cache_row_layout(caches)
+    n_leaves = len(layout.slots)
+    row = 3
+    rows_ix = jnp.asarray([row], jnp.int32)
+
+    def med_us(fn, repeats=5):
+        fn()                                     # warm compiles
+        walls = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            walls.append((time.perf_counter() - t0) * 1e6)
+        return float(np.median(walls))
+
+    legacy_cap_us = med_us(
+        lambda: jax.device_get(M.cache_read_row(caches, row)))
+    fused_cap_us = med_us(lambda: jax.device_get(
+        M.cache_read_rows(caches, rows_ix, layout=layout, impl="ref")))
+    host_tree = jax.device_get(M.cache_read_row(caches, row))
+    host_blob = np.asarray(jax.device_get(
+        M.cache_read_rows(caches, rows_ix, layout=layout, impl="ref")))
+
+    def legacy_restore():
+        rc = jax.tree.map(jnp.asarray, host_tree)
+        out = M.cache_write_row(caches, rc, row)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+
+    def fused_restore():
+        out = M.cache_write_rows(caches, jnp.asarray(host_blob), rows_ix,
+                                 layout=layout, impl="ref")
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+
+    legacy_rest_us = med_us(legacy_restore)
+    fused_rest_us = med_us(fused_restore)
+    return [
+        ("snapshot_plane/capture/legacy", legacy_cap_us,
+         f"transfers={n_leaves} (one per leaf)"),
+        ("snapshot_plane/capture/fused", fused_cap_us,
+         f"transfers=1 leaves={n_leaves} row_B={layout.row_bytes} "
+         f"speedup={legacy_cap_us / max(fused_cap_us, 1e-9):.2f}x"),
+        ("snapshot_plane/restore/legacy", legacy_rest_us,
+         f"transfers={n_leaves} (one per leaf)"),
+        ("snapshot_plane/restore/fused", fused_rest_us,
+         f"transfers=1 leaves={n_leaves} "
+         f"speedup={legacy_rest_us / max(fused_rest_us, 1e-9):.2f}x"),
+    ]
+
+
+def print_trajectory() -> None:
+    """The committed regression baselines side by side: per scenario
+    family the row count + median tight-tier TTFT p99 (BENCH_6..9), and
+    the device-bench cells (BENCH_10) next to them — the perf trajectory
+    at a glance (``python -m benchmarks.figures --trajectory``)."""
+    import json
+    import os
+    bench_dir = os.path.dirname(__file__)
+
+    print("scenario families (BENCH_6..9):")
+    fam: dict[str, list] = {}
+    for fname in ("BENCH_6.json", "BENCH_7.json", "BENCH_8.json",
+                  "BENCH_9.json"):
+        path = os.path.join(bench_dir, fname)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            for name, row in json.load(f).items():
+                tier = (row.get("ttft_p99_ms_by_tier") or {})
+                vals = [v for v in tier.values() if v is not None]
+                fam.setdefault(row.get("family", "?"), []).append(
+                    (name, min(vals) if vals else None))
+    for family in sorted(fam):
+        vals = [v for _, v in fam[family] if v is not None]
+        med = f"{float(np.median(vals)):8.1f}" if vals else "     n/a"
+        print(f"  {family:<12} scenarios={len(fam[family]):>2} "
+              f"ttft_p99_ms~{med}")
+
+    print("device bench (BENCH_10):")
+    path = os.path.join(bench_dir, "BENCH_10.json")
+    if not os.path.exists(path):
+        print("  (no BENCH_10.json committed yet)")
+        return
+    with open(path) as f:
+        cells = json.load(f)
+    for name in sorted(cells):
+        r = cells[name]
+        print(f"  {name:<36} capture_us={r['capture_us']:7.1f} "
+              f"restore_us={r['restore_us']:7.1f} "
+              f"bytes={r['blob_bytes']:>7} ratio={r['capture_ratio']:.2f}")
+
+
 ALL = [fig5_reclaim_latency_vs_size, fig6_reclaim_vs_occupancy,
        fig7_reclaim_compute, fig8_trace_reclaim_throughput,
        fig9_p99_latency, fig10_interference, kernel_layout_cost,
-       cluster_reclaim]
+       cluster_reclaim, snapshot_data_plane]
+
+
+if __name__ == "__main__":
+    import sys
+    if "--trajectory" in sys.argv:
+        print_trajectory()
+    else:
+        print("name,us_per_call,derived")
+        for _fn in ALL:
+            for _name, _us, _derived in _fn():
+                print(f"{_name},{_us:.1f},{_derived}")

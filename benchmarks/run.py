@@ -46,6 +46,7 @@ AUTOSCALE_BASELINE = os.path.join(os.path.dirname(__file__),
 AUTOSCALE_FAMILIES = ("autoscale",)  # families whose rows live in BENCH_8
 DEDUP_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_9.json")
 DEDUP_FAMILIES = ("dedup",)     # families whose rows live in BENCH_9
+DEVICE_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_10.json")
 
 
 def _time_values(row: dict) -> dict:
@@ -140,6 +141,55 @@ def run_scenarios(args) -> int:
     return 0
 
 
+def run_device(args) -> int:
+    """The snapshot data-plane bench (BENCH_10): fused capture/restore
+    walls, staged bytes, and roofline expected-vs-measured ratios per
+    (config x shape x page size) cell — same --check/--update-baseline
+    discipline as the scenario bank, but bytes gate EXACTLY, ratios gate
+    on the 2x roofline band, and walls get device_bench.WALL_SLACK."""
+    from benchmarks import device_bench
+
+    rows = device_bench.run_cells(smoke=args.smoke and not args.check)
+    failures = []
+    for name in sorted(rows):
+        r = rows[name]
+        pag = "" if r["paginate_us"] is None else \
+            f" paginate_us={r['paginate_us']:.1f} pages={r['pages']}"
+        print(f"{name}: capture_us={r['capture_us']:.1f} "
+              f"restore_us={r['restore_us']:.1f} bytes={r['blob_bytes']} "
+              f"capture_ratio={r['capture_ratio']:.3f} "
+              f"restore_ratio={r['restore_ratio']:.3f} "
+              f"impl={r['impl']}{pag}")
+        # the roofline band gates EVERY run (smoke included), baseline or
+        # not: measured bytes drifting from the specs model is a bug now
+        for f in ("capture_ratio", "restore_ratio"):
+            band = device_bench.RATIO_BAND
+            if not (1.0 / band < r[f] < band):
+                failures.append(f"{name}.{f}: {r[f]:.3f} outside the "
+                                f"{band}x roofline band")
+
+    if args.update_baseline:
+        with open(DEVICE_BASELINE, "w") as f:
+            json.dump(rows, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"baseline written: {DEVICE_BASELINE} ({len(rows)} cells)")
+    elif args.check:
+        with open(DEVICE_BASELINE) as f:
+            base = json.load(f)
+        failures += device_bench.check_rows(rows, base)
+
+    if failures:
+        print(f"\n--device check FAILED ({len(failures)}):")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    if args.check:
+        print(f"\n--device check ok: {len(rows)} cells (bytes exact, "
+              f"roofline within {device_bench.RATIO_BAND}x, walls within "
+              f"{device_bench.WALL_SLACK}x)")
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -147,8 +197,14 @@ def main() -> None:
     ap.add_argument("--scenarios", action="store_true",
                     help="run the multi-tenant scenario bank instead of "
                          "the device benchmarks")
+    ap.add_argument("--device", action="store_true",
+                    help="run the snapshot data-plane device bench "
+                         "(BENCH_10: fused capture/restore kernels vs "
+                         "their roofline bytes models)")
     ap.add_argument("--smoke", action="store_true",
-                    help="scenario mode: smallest scenario per family only")
+                    help="scenario mode: smallest scenario per family "
+                         "only; device mode: one tiny cell on the Pallas "
+                         "interpret path, cross-checked against ref")
     ap.add_argument("--check", action="store_true",
                     help="scenario mode: compare the full bank against the "
                          "committed baseline; exit 1 on >20%% regression")
@@ -165,6 +221,8 @@ def main() -> None:
 
     if args.scenarios:
         raise SystemExit(run_scenarios(args))
+    if args.device:
+        raise SystemExit(run_device(args))
 
     from benchmarks import figures
 

@@ -1,0 +1,276 @@
+"""Pallas TPU kernels: fused snapshot gather-capture / scatter-restore.
+
+The snapshot data plane used to pay one dispatch per cache leaf: capture
+sliced every leaf of an arena row (``cache_read_row``) and ``device_get``
+materialized each slice as its own transfer; restore ran one ``.at[].set``
+per leaf.  These kernels collapse a whole row (or a batch of rows) into
+ONE launch each:
+
+  capture — grid step ``i`` gathers every leaf's ``rows[i]`` slice into a
+            single contiguous staging blob ``(n_rows, row_elems)``.  The
+            blob's byte image is exactly the leaf-order concatenation of
+            each slice's C-order bytes — the same layout the engine's
+            paginator hashes — so one ``device_get`` of the blob is the
+            entire device->host cost and pagination never re-copies.
+  restore — the inverse scatter: grid step ``i`` carves the blob row back
+            into every leaf at ``rows[i]``.  The leaves are donated
+            (input/output aliased), so untouched rows stay in place — the
+            same in-place discipline as ``kv_compact``.
+
+Rows are scalar-prefetched so every leaf's index map can chase them
+(``PrefetchScalarGridSpec``, the ``kv_compact`` pattern).  Leaf offsets
+into the blob are static (baked into the kernel body from ``RowLayout``),
+so the body is pure static slicing — no dynamic addressing beyond the
+row index maps.
+
+Roofline contract (the dace ``RooflineModel`` wrapper pattern: every
+kernel gets an analytic model and measurements are checked against it):
+``capture_cost``/``restore_cost`` predict the bytes each launch must move
+from the *cache specs alone*; the device benchmark publishes expected vs
+measured bytes per (shape x page size) cell and the ``BENCH_10.json``
+gate fails if they ever drift apart by more than 2x.
+
+TPU caveat: blocks are whole per-leaf row slices (e.g. ``(G,1,T,H,D)``),
+sized well under VMEM for arena partitions but not tiled to the (16,128)
+bf16 sublane grid; off-TPU the kernels run in interpret mode (the only
+mode this CPU container exercises), on TPU Mosaic pads the odd tails.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import roofline
+
+
+# ---------------------------------------------------------------------------
+# Row layout: the flat byte image of one arena row
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """One cache leaf's slice of the staging blob."""
+    axis: int                    # leaf batch (row) axis
+    block_shape: tuple           # leaf shape with the batch extent -> 1
+    size: int                    # elements of one row slice
+    offset: int                  # element offset into the blob row
+
+
+@dataclasses.dataclass(frozen=True)
+class RowLayout:
+    """Static description of a cache tree's per-row staging blob.
+
+    Per-row slice shapes do not depend on the arena row count (only the
+    batch extent varies), so one layout is valid across every bucket of
+    the ladder.  Hashable -> usable as a jit static argument."""
+    slots: tuple                 # tuple[LeafSlot, ...] in tree-flatten order
+    dtype: str                   # shared leaf dtype (cache trees are bf16)
+    total_elems: int
+
+    @property
+    def itemsize(self) -> int:
+        import numpy as np
+        return np.dtype(self.dtype).itemsize
+
+    @property
+    def row_bytes(self) -> int:
+        return self.total_elems * self.itemsize
+
+    def signature(self) -> tuple:
+        """Shape/dtype fingerprint stored in snapshot payloads so a
+        restore can assert the blob still matches the live cache tree."""
+        return tuple((s.block_shape, self.dtype) for s in self.slots)
+
+
+def build_layout(leaves: Sequence[Any], axes: Sequence[int]) -> RowLayout:
+    """Layout from (leaf, batch_axis) pairs (arrays or tracers)."""
+    assert len(leaves) == len(axes) and leaves
+    dtypes = {str(x.dtype) for x in leaves}
+    assert len(dtypes) == 1, \
+        f"fused snapshot blob needs one leaf dtype, got {sorted(dtypes)}"
+    slots, off = [], 0
+    for x, ax in zip(leaves, axes):
+        shape = tuple(x.shape)
+        block = shape[:ax] + (1,) + shape[ax + 1:]
+        size = math.prod(block)
+        slots.append(LeafSlot(axis=ax, block_shape=block, size=size,
+                              offset=off))
+        off += size
+    return RowLayout(slots=tuple(slots), dtype=dtypes.pop(),
+                     total_elems=off)
+
+
+# ---------------------------------------------------------------------------
+# Kernels
+# ---------------------------------------------------------------------------
+
+
+def _slot_index_map(slot: LeafSlot):
+    """Block index map chasing the scalar-prefetched row list: the batch
+    axis follows ``rows[i]``, every other axis is covered by the block."""
+    def index_map(i, rows, _axis=slot.axis, _nd=len(slot.block_shape)):
+        return tuple(rows[i] if j == _axis else 0 for j in range(_nd))
+    return index_map
+
+
+def snapshot_capture(leaves, rows, *, layout: RowLayout,
+                     interpret: bool = True):
+    """Gather ``rows`` of every cache leaf into one staging blob.
+
+    leaves: flat cache leaves (tree-flatten order of the cache tree);
+    rows (N,) int32 arena row ids.  Returns ``(N, layout.total_elems)``
+    in the shared leaf dtype — ONE kernel launch for all leaves x rows.
+    """
+    n = rows.shape[0]
+
+    def kernel(rows_ref, *refs):
+        del rows_ref
+        out = refs[-1]
+        for slot, ref in zip(layout.slots, refs[:-1]):
+            out[0, slot.offset:slot.offset + slot.size] = \
+                ref[...].reshape((slot.size,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec(slot.block_shape, _slot_index_map(slot))
+                  for slot in layout.slots],
+        out_specs=pl.BlockSpec((1, layout.total_elems),
+                               lambda i, rows: (i, 0)),
+    )
+    from repro.kernels.ops import tpu_compiler_params
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, layout.total_elems),
+                                       jnp.dtype(layout.dtype)),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(rows.astype(jnp.int32), *leaves)
+
+
+def snapshot_restore(leaves, blob, rows, *, layout: RowLayout,
+                     interpret: bool = True):
+    """Scatter blob rows back into every cache leaf at ``rows`` — the
+    exact inverse of ``snapshot_capture``, one launch, leaves donated
+    (aliased) so untouched rows stay in place.  Returns the new leaves.
+    """
+    n = rows.shape[0]
+    n_leaves = len(layout.slots)
+
+    def kernel(rows_ref, blob_ref, *refs):
+        del rows_ref
+        outs = refs[n_leaves:]
+        for slot, out in zip(layout.slots, outs):
+            out[...] = blob_ref[
+                0, slot.offset:slot.offset + slot.size
+            ].reshape(slot.block_shape)
+
+    leaf_specs = [pl.BlockSpec(slot.block_shape, _slot_index_map(slot))
+                  for slot in layout.slots]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, layout.total_elems),
+                               lambda i, rows: (i, 0))] + leaf_specs,
+        out_specs=leaf_specs,
+    )
+    from repro.kernels.ops import tpu_compiler_params
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(tuple(x.shape), x.dtype)
+                   for x in leaves],
+        # operand k (after 1 scalar arg + 1 blob) aliases output k
+        input_output_aliases={2 + k: k for k in range(n_leaves)},
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(rows.astype(jnp.int32), blob, *leaves)
+
+
+# ---------------------------------------------------------------------------
+# Roofline bytes models (analytic — from specs, never from live arrays)
+# ---------------------------------------------------------------------------
+
+
+def expected_row_bytes(cfg, partition_tokens: int) -> int:
+    """Bytes of one arena row's staging blob, derived from the cache
+    SPECS (an independent code path from the live layout, so a silent
+    layout change shows up as expected-vs-measured drift)."""
+    import numpy as np
+    from repro.models.model import cache_specs
+    from repro.models.layers import tree_map_specs
+    total = 0
+
+    def acc(s):
+        nonlocal total
+        total += math.prod(s.shape) * np.dtype(s.dtype).itemsize
+
+    tree_map_specs(acc, cache_specs(cfg, 1, partition_tokens))
+    return total
+
+
+def capture_cost(row_bytes: int, n_rows: int) -> dict[str, float]:
+    """Bytes one fused capture launch must move: read every leaf slice,
+    write the blob (HBM), then one device->host copy of the blob."""
+    hbm = 2.0 * n_rows * row_bytes
+    d2h = float(n_rows * row_bytes)
+    return {"hbm_bytes": hbm, "host_bytes": d2h,
+            "memory_s": hbm / roofline.HBM_BW}
+
+
+def restore_cost(row_bytes: int, n_rows: int,
+                 new_fraction: float = 1.0) -> dict[str, float]:
+    """Bytes one fused restore moves: host->device only for the pages not
+    already mapped (CoW), then blob read + leaf scatter write in HBM."""
+    hbm = 2.0 * n_rows * row_bytes
+    h2d = float(n_rows * row_bytes) * new_fraction
+    return {"hbm_bytes": hbm, "host_bytes": h2d,
+            "memory_s": hbm / roofline.HBM_BW}
+
+
+# ---------------------------------------------------------------------------
+# Data-plane accounting (dispatch / transfer counters the tests assert on)
+# ---------------------------------------------------------------------------
+
+STATS = {
+    "capture_launches": 0,       # fused capture executions
+    "restore_launches": 0,       # fused restore executions
+    "d2h_transfers": 0,          # device->host copies (capture readout)
+    "d2h_bytes": 0,
+    "h2d_transfers": 0,          # host->device copies (restore staging)
+    "h2d_bytes": 0,
+    "remap_restores": 0,         # fully-mapped CoW restores (zero h2d)
+}
+
+
+def reset_stats() -> None:
+    for k in STATS:
+        STATS[k] = 0
+
+
+def note_launch(kind: str) -> None:
+    STATS[f"{kind}_launches"] += 1
+
+
+def note_d2h(nbytes: int) -> None:
+    STATS["d2h_transfers"] += 1
+    STATS["d2h_bytes"] += int(nbytes)
+
+
+def note_h2d(nbytes: int) -> None:
+    STATS["h2d_transfers"] += 1
+    STATS["h2d_bytes"] += int(nbytes)
+
+
+def note_remap() -> None:
+    STATS["remap_restores"] += 1

@@ -70,3 +70,30 @@ def kv_compact(pool, src, dst, count):
     live = jnp.arange(src.shape[0]) < count
     sdst = jnp.where(live, dst, pool.shape[0])
     return pool.at[sdst].set(pool[jnp.where(live, src, 0)], mode="drop")
+
+
+def snapshot_capture(leaves, rows, layout):
+    """Fused-capture oracle: per-row slices of every leaf, concatenated in
+    tree-flatten order into a (N, row_elems) blob.  The blob's byte image
+    matches the legacy per-leaf ``tobytes()`` concatenation (a size-1 batch
+    axis never changes C order), so digests are stable across paths."""
+    n = rows.shape[0]
+    parts = []
+    for leaf, slot in zip(leaves, layout.slots):
+        sl = jnp.moveaxis(jnp.take(leaf, rows, axis=slot.axis), slot.axis, 0)
+        parts.append(sl.reshape(n, slot.size))
+    return jnp.concatenate(parts, axis=1)
+
+
+def snapshot_restore(leaves, blob, rows, layout):
+    """Fused-restore oracle: scatter blob rows back into every leaf at
+    ``rows``; untouched rows pass through."""
+    n = rows.shape[0]
+    outs = []
+    for leaf, slot in zip(leaves, layout.slots):
+        chunk = blob[:, slot.offset:slot.offset + slot.size]
+        rest = slot.block_shape[:slot.axis] + slot.block_shape[slot.axis + 1:]
+        vals = jnp.moveaxis(chunk.reshape((n,) + rest), 0, slot.axis)
+        idx = (slice(None),) * slot.axis + (rows,)
+        outs.append(leaf.at[idx].set(vals.astype(leaf.dtype)))
+    return outs

@@ -133,6 +133,57 @@ def cache_write_row(caches, row_caches, row: int):
 
 
 # ---------------------------------------------------------------------------
+# Fused row staging (snapshot data plane): whole rows move as ONE flat blob
+# through one kernel launch, instead of one dispatch per leaf
+# ---------------------------------------------------------------------------
+
+
+def cache_flat_axes(caches):
+    """Flat cache leaves + their batch axes, in tree-flatten order.
+    Returns (leaves, axes, treedef)."""
+    leaves, treedef = jax.tree.flatten(caches)
+    axes = jax.tree.leaves(cache_axis_map(caches, lambda x, ax: ax))
+    return leaves, axes, treedef
+
+
+def cache_row_layout(caches):
+    """Static ``RowLayout`` of this cache tree's per-row staging blob.
+    Row-slice shapes are independent of the arena row count, so one
+    layout stays valid across every bucket of the ladder."""
+    from repro.kernels.kv_snapshot import build_layout
+    leaves, axes, _ = cache_flat_axes(caches)
+    return build_layout(leaves, axes)
+
+
+def cache_read_rows(caches, rows, *, layout=None, impl="pallas"):
+    """Batched twin of ``cache_read_row``: gather arena rows ``rows`` of
+    EVERY leaf into one contiguous (N, row_elems) staging blob in a single
+    fused launch.  The blob's byte image per row equals the leaf-order
+    ``tobytes()`` concatenation the paginator hashes."""
+    from repro.kernels import ops
+    leaves, _axes, _ = cache_flat_axes(caches)
+    if layout is None:
+        layout = cache_row_layout(caches)
+    rows = jnp.asarray(rows, dtype=jnp.int32)
+    return ops.kv_snapshot_capture(tuple(leaves), rows, layout=layout,
+                                   impl=impl)
+
+
+def cache_write_rows(caches, blob, rows, *, layout=None, impl="pallas"):
+    """Batched twin of ``cache_write_row``: scatter staging-blob rows back
+    into EVERY leaf at arena rows ``rows`` in a single fused launch.
+    Untouched rows pass through."""
+    from repro.kernels import ops
+    leaves, _axes, treedef = cache_flat_axes(caches)
+    if layout is None:
+        layout = cache_row_layout(caches)
+    rows = jnp.asarray(rows, dtype=jnp.int32)
+    new = ops.kv_snapshot_restore(tuple(leaves), blob, rows, layout=layout,
+                                  impl=impl)
+    return jax.tree.unflatten(treedef, list(new))
+
+
+# ---------------------------------------------------------------------------
 # Positions
 # ---------------------------------------------------------------------------
 

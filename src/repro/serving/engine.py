@@ -48,10 +48,89 @@ from repro.cluster.host import (AlwaysGrantBroker, Grant, MemoryBroker,
 from repro.configs.base import ModelConfig
 from repro.core.arena import ArenaSpec, ReclaimEvent
 from repro.core.elastic import ElasticArena, bucket_ladder, target_bucket
+from repro.kernels import kv_snapshot
 from repro.models import model as M
 from repro.serving.request import Request, State, slo_tier_of
 
 i32 = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Snapshot data plane: staged row blobs + content-addressed pagination.
+# Pure host-side logic lives at module level so the fast tier can test it
+# without booting an engine.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StagedRow:
+    """Host-side snapshot payload: ONE contiguous byte buffer (the fused
+    capture kernel's single ``device_get``) plus enough metadata to carve
+    it back into a batch==1 cache tree of zero-copy views on demand."""
+    blob: np.ndarray             # (row_bytes,) uint8
+    treedef: Any                 # cache tree structure
+    metas: tuple                 # ((row-slice shape, dtype str), ...)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.blob.nbytes)
+
+    def tree(self):
+        return blob_to_row_tree(self.blob, self.treedef, self.metas)
+
+
+def blob_to_row_tree(blob_u8: np.ndarray, treedef, metas):
+    """Carve a staged row blob into a batch==1 cache tree of zero-copy
+    ``np.frombuffer`` views — no bytes move; every leaf aliases the blob."""
+    leaves, off = [], 0
+    for shape, dtype in metas:
+        dt = np.dtype(dtype)
+        n = int(np.prod(shape))
+        leaves.append(np.frombuffer(blob_u8, dtype=dt, count=n,
+                                    offset=off).reshape(shape))
+        off += n * dt.itemsize
+    assert off == blob_u8.nbytes, (off, blob_u8.nbytes)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def paginate_blob(blob_u8, units: int, page_bytes: int,
+                  n_dev: int = 1) -> list:
+    """Split a staged row blob into fixed-size content-addressed pages.
+
+    Each chunk is hashed in place (memoryview slices — the blob is never
+    re-materialized as one bytes object) and keyed by content digest with
+    the page's unit charge folded in, so one digest always means one
+    (content, units) pair — the store asserts that.  Units spread over
+    the pages in whole mesh stripes so ANY subset of pages charges
+    balanced across devices; short manifests may carry zero-unit tail
+    pages.  The digest formula is pinned: the fused blob's byte image
+    equals the per-leaf ``tobytes()`` concatenation of the old path, so
+    digests (and the dedup baselines keyed on them) are unchanged."""
+    mv = memoryview(np.ascontiguousarray(blob_u8)).cast("B")
+    chunks = [mv[i:i + page_bytes]
+              for i in range(0, len(mv), page_bytes)] or [memoryview(b"")]
+    assert units % n_dev == 0, (units, n_dev)
+    base, rem = divmod(units // n_dev, len(chunks))
+    specs = []
+    for i, chunk in enumerate(chunks):
+        u = (base + (1 if i < rem else 0)) * n_dev
+        digest = "%s-%d" % (hashlib.sha256(chunk).hexdigest()[:16], u)
+        specs.append((digest, u, len(chunk), bytes(chunk)))
+    return specs
+
+
+def assemble_pages(specs: list) -> np.ndarray:
+    """Concatenate page payloads into ONE contiguous uint8 host buffer:
+    each page is wrapped in a zero-copy ``np.frombuffer`` view and copied
+    exactly once into its slot — the single host-side copy a paged
+    restore pays before its one fused host->device transfer."""
+    total = sum(b for _d, _u, b, _p in specs)
+    out = np.empty(total, np.uint8)
+    off = 0
+    for _d, _u, b, p in specs:
+        out[off:off + b] = np.frombuffer(p, np.uint8, count=b)
+        off += b
+    return out
 
 
 @dataclasses.dataclass
@@ -68,9 +147,11 @@ class ServeEngine:
                  headroom: int = 1, seed: int = 0, prewarm: bool = True,
                  broker: Optional[MemoryBroker] = None,
                  replica_id: str = "r0",
-                 snapshot_page_bytes: Optional[int] = None):
+                 snapshot_page_bytes: Optional[int] = None,
+                 snapshot_impl: Optional[str] = None):
         assert mode in ("hotmem", "vanilla", "static")
         assert snapshot_page_bytes is None or snapshot_page_bytes > 0
+        assert snapshot_impl in (None, "pallas", "ref")
         if mode == "vanilla":
             assert cfg.family not in ("ssm", "hybrid"), \
                 "paged baseline mirrors token-extensive KV only"
@@ -158,6 +239,20 @@ class ServeEngine:
         # maps those copy-on-write instead of re-copying them
         self.snapshot_page_bytes = snapshot_page_bytes
         self._mapped: set[str] = set()
+        # fused snapshot data plane: rows move as one staging blob through
+        # one kernel launch (see repro.kernels.kv_snapshot).  Like the
+        # other ops, the Pallas path runs compiled on TPU only; off-TPU
+        # the engine times the pure-jnp ref twin (interpret-mode tracing
+        # overhead would drown the wall signal) — bit-identical bytes
+        # either way, pinned by tests/test_kernels.py.
+        self.snapshot_impl = snapshot_impl or \
+            ("pallas" if jax.default_backend() == "tpu" else "ref")
+        self._snap_layout = None
+        self._snap_warmed: set = set()
+        # digest -> (device u8 blob, start, stop): where page bytes are
+        # already resident ON DEVICE.  A fully-mapped local CoW restore
+        # reassembles its row from these slices — zero h2d payload bytes.
+        self._device_pages: dict[str, tuple] = {}
         self._row_req: dict[int, Request] = {}
         self._decode_jit: dict[int, Any] = {}       # rows -> compiled step
         self._prefill_jit: dict[int, Any] = {}      # prompt len -> compiled
@@ -370,17 +465,52 @@ class ServeEngine:
         digest this replica already materialized (an earlier capture or
         restore) are remapped, not re-copied — the charged wall scales by
         the fraction of pages actually new here, and the event reports
-        ``pages_total`` / ``pages_shared``."""
+        ``pages_total`` / ``pages_shared``.  When EVERY page of a local
+        entry is still resident on device (``_device_pages``), the row is
+        reassembled from those mapped slices and scattered in place: the
+        payload never leaves the device (zero host->device bytes)."""
         req.partition = row
         req.admitted_s = self.now
         req.state = State.PREFILL
         copy_s = snap.claim_copy() if hasattr(snap, "claim_copy") else 0.0
         specs = self.broker.snapshot_page_specs(snap.key) \
             if getattr(snap, "pages", None) is not None else None
+        staged = isinstance(snap.payload, StagedRow)
+        layout = remap = None
+        if specs is not None or staged:
+            layout = self._snapshot_layout()
+            self._warm_snapshot_op("restore")
+            remap = specs is not None and copy_s == 0.0 and \
+                all(d in self._device_pages for d, _u, _b, _p in specs)
         t0 = time.perf_counter()
-        row_caches = jax.tree.map(jnp.asarray, snap.payload) \
-            if specs is None else self._reassemble(snap.payload, specs)
-        self.caches = M.cache_write_row(self.caches, row_caches, row)
+        if specs is None and not staged:
+            # legacy opaque tree payload: per-leaf transfer + row write
+            row_caches = jax.tree.map(jnp.asarray, snap.payload)
+            self.caches = M.cache_write_row(self.caches, row_caches, row)
+        else:
+            if remap:
+                # fully-mapped local CoW restore: concatenate the mapped
+                # on-device byte slices back into a staging blob — no
+                # payload byte crosses the host/device boundary
+                parts = [dev[s:e] for dev, s, e in
+                         (self._device_pages[d] for d, _u, _b, _p in specs)]
+                dev_u8 = parts[0] if len(parts) == 1 else \
+                    jnp.concatenate(parts)
+                dev_blob = jax.lax.bitcast_convert_type(
+                    dev_u8.reshape(1, layout.total_elems, layout.itemsize),
+                    jnp.dtype(layout.dtype))
+                kv_snapshot.note_remap()
+            else:
+                blob_u8 = self._reassemble(snap.payload, specs) \
+                    if specs is not None else snap.payload.blob
+                host_blob = blob_u8.view(np.dtype(layout.dtype)).reshape(
+                    1, layout.total_elems)
+                dev_blob = jnp.asarray(host_blob)   # ONE fused h2d copy
+                kv_snapshot.note_h2d(host_blob.nbytes)
+            self.caches = M.cache_write_rows(
+                self.caches, dev_blob, jnp.asarray([row], i32),
+                layout=layout, impl=self.snapshot_impl)
+            kv_snapshot.note_launch("restore")
         jax.block_until_ready(jax.tree.leaves(self.caches)[0])
         wall = time.perf_counter() - t0
         detail = {"rid": req.rid, "key": snap.key, "bytes": snap.nbytes,
@@ -393,6 +523,7 @@ class ServeEngine:
             # write, so scale it by the new-page fraction)
             wall *= (total - shared) / total if total else 1.0
             self._mapped.update(d for d, _u, _b, _p in specs)
+            self._index_device_pages(dev_blob, specs)
             detail["pages_total"] = total
             detail["pages_shared"] = shared
         wall += copy_s
@@ -451,15 +582,61 @@ class ServeEngine:
             # KILLED was already force-released by the manager
 
     # ------------------------------------------------------------- elastic
+    def _snapshot_layout(self):
+        """Static blob layout of one arena row (row-slice shapes do not
+        depend on the arena's row count, so one layout survives every
+        bucket switch)."""
+        if self._snap_layout is None:
+            self._snap_layout = M.cache_row_layout(self.caches)
+        return self._snap_layout
+
+    def _warm_snapshot_op(self, kind: str) -> None:
+        """Dummy-execute the fused snapshot op for the CURRENT arena shape
+        outside any timed region, so the first timed capture / restore
+        measures data movement, not a jit compile (the snapshot twin of
+        ``_warm_decode``'s AOT discipline).  The restore dummy's output is
+        discarded — the op does not donate, so ``self.caches`` is
+        untouched."""
+        key = (kind, self._rows(), self.snapshot_impl)
+        if key in self._snap_warmed:
+            return
+        layout = self._snapshot_layout()
+        rows = jnp.zeros((1,), i32)
+        if kind == "capture":
+            out = M.cache_read_rows(self.caches, rows, layout=layout,
+                                    impl=self.snapshot_impl)
+        else:
+            blob = jnp.zeros((1, layout.total_elems), layout.dtype)
+            out = M.cache_write_rows(self.caches, blob, rows, layout=layout,
+                                     impl=self.snapshot_impl)
+        jax.block_until_ready(out)
+        self._snap_warmed.add(key)
+
+    def _index_device_pages(self, dev_blob, specs: list) -> None:
+        """Remember where each page's bytes live ON DEVICE (byte slices of
+        the staged blob): a later fully-mapped local CoW restore
+        reassembles its row from these slices and never pays a
+        host->device payload transfer."""
+        dev_u8 = jax.lax.bitcast_convert_type(
+            dev_blob, jnp.uint8).reshape(-1)
+        off = 0
+        for d, _u, b, _p in specs:
+            self._device_pages[d] = (dev_u8, off, off + b)
+            off += b
+
     def _offer_snapshot(self, prof_name: str, rid: str, row: int) -> bool:
         """Persist an about-to-be-recycled warm partition to the host
         snapshot pool instead of discarding its prefix KV.  The readout is
-        a real device gather + device->host copy, charged to this
-        replica's clock — paid only when the broker has room (brokers
-        without a pool decline for free, keeping the discard path
-        byte-identical to pre-snapshot behavior).
+        ONE fused gather launch (every leaf's row slice lands in a single
+        contiguous staging blob, ``kv_snapshot``) plus ONE device->host
+        copy of that blob, charged to this replica's clock — paid only
+        when the broker has room (brokers without a pool decline for
+        free, keeping the discard path byte-identical to pre-snapshot
+        behavior).  ``nbytes`` and pagination both read the same staged
+        blob: the old path's double byte-materialization (tree traversal
+        for nbytes, then per-leaf ``tobytes()`` again) is gone.
 
-        With ``snapshot_page_bytes`` set the readout is split into
+        With ``snapshot_page_bytes`` set the blob is split into
         content-addressed pages (``_paginate``) before the put, so the
         pool charges only pages its store does not already hold.  The
         room probe stays the conservative all-pages-new check — it runs
@@ -470,13 +647,25 @@ class ServeEngine:
         units = self.spec.blocks_per_partition
         if not self.broker.snapshot_room(prof_name, units):
             return False
+        layout = self._snapshot_layout()
+        self._warm_snapshot_op("capture")
         t0 = time.perf_counter()
-        payload = jax.device_get(M.cache_read_row(self.caches, row))
+        dev_blob = M.cache_read_rows(self.caches, jnp.asarray([row], i32),
+                                     layout=layout, impl=self.snapshot_impl)
+        host = np.asarray(jax.device_get(dev_blob))
         wall = time.perf_counter() - t0
-        nbytes = int(sum(x.nbytes for x in jax.tree.leaves(payload)))
+        kv_snapshot.note_launch("capture")
+        kv_snapshot.note_d2h(host.nbytes)
+        blob_u8 = host.view(np.uint8).reshape(-1)    # zero-copy byte image
+        nbytes = blob_u8.nbytes                      # == sum of leaf nbytes
+        treedef = jax.tree.structure(self.caches)
+        metas = tuple((s.block_shape, layout.dtype) for s in layout.slots)
         pages = None
         if self.snapshot_page_bytes is not None:
-            payload, pages = self._paginate(payload, units)
+            payload: Any = ("paged", treedef, metas)
+            pages = self._paginate(blob_u8, units)
+        else:
+            payload = StagedRow(blob=blob_u8, treedef=treedef, metas=metas)
         ok = self.broker.snapshot_put(
             prof_name, units=units, payload=payload,
             tokens=self._prof_tokens.get(prof_name, 0), nbytes=nbytes,
@@ -484,55 +673,34 @@ class ServeEngine:
         if ok:
             if pages is not None:
                 self._mapped.update(d for d, _u, _b, _p in pages)
+                self._index_device_pages(dev_blob, pages)
             self.now += wall
             self.events.append(StepEvent(self.now, "snapshot", wall,
                                          {"key": prof_name, "rid": rid,
                                           "bytes": nbytes, "row": row}))
         return ok
 
-    def _paginate(self, payload, units: int) -> tuple[Any, list]:
-        """Split a copied-out row payload into fixed-size content-
-        addressed pages: the flattened leaves' bytes are chunked at
-        ``snapshot_page_bytes`` and each chunk keyed by its content hash
-        (with the page's unit charge folded into the key, so one digest
-        always means one (content, units) pair — the store asserts that).
-        The entry's ``units`` are spread over the pages in whole mesh
-        stripes so ANY subset of pages charges balanced across devices;
-        short manifests may carry zero-unit tail pages.  Returns the
-        manifest-form payload (treedef + leaf metadata, enough for
-        ``_reassemble``) and the page spec list."""
-        leaves, treedef = jax.tree.flatten(payload)
-        leaves = [np.ascontiguousarray(x) for x in leaves]
-        blob = b"".join(x.tobytes() for x in leaves)
-        metas = tuple((tuple(x.shape), str(x.dtype)) for x in leaves)
-        pb = self.snapshot_page_bytes
-        chunks = [blob[i:i + pb] for i in range(0, len(blob), pb)] or [b""]
-        g = self._n_dev
-        assert units % g == 0, (units, g)        # asserted at boot too
-        base, rem = divmod(units // g, len(chunks))
-        specs = []
-        for i, chunk in enumerate(chunks):
-            u = (base + (1 if i < rem else 0)) * g
-            digest = "%s-%d" % (hashlib.sha256(chunk).hexdigest()[:16], u)
-            specs.append((digest, u, len(chunk), chunk))
-        return ("paged", treedef, metas), specs
+    def _paginate(self, blob_u8: np.ndarray, units: int) -> list:
+        """Content-addressed pagination of the staged row blob (module-
+        level ``paginate_blob`` does the work — pure host logic, fast-tier
+        testable).  Digests are pinned across the kernel migration: the
+        fused blob's byte image equals the per-leaf era's ``tobytes()``
+        concatenation."""
+        return paginate_blob(blob_u8, units, self.snapshot_page_bytes,
+                             self._n_dev)
 
-    def _reassemble(self, payload, specs: list):
-        """Rebuild a device row tree from a paged entry: concatenate the
-        manifest's page payloads back into the flat byte blob and carve
-        it by the captured leaf metadata."""
-        kind, treedef, metas = payload
+    def _reassemble(self, payload, specs: list) -> np.ndarray:
+        """Rebuild the staged row blob from a paged entry: ONE contiguous
+        host buffer assembled from zero-copy page views
+        (``assemble_pages``).  Carving back into leaves happens on device
+        in the single fused scatter-restore launch — not per leaf, and
+        not on the host."""
+        kind, _treedef, metas = payload
         assert kind == "paged", kind
-        blob = b"".join(p for _d, _u, _b, p in specs)
-        leaves, off = [], 0
-        for shape, dtype in metas:
-            arr = np.frombuffer(blob, dtype=dtype,
-                                count=int(np.prod(shape)),
-                                offset=off).reshape(shape)
-            off += arr.nbytes
-            leaves.append(jnp.asarray(arr))
-        assert off == len(blob), (off, len(blob))
-        return jax.tree.unflatten(treedef, leaves)
+        blob = assemble_pages(specs)
+        want = sum(int(np.prod(s)) * np.dtype(d).itemsize for s, d in metas)
+        assert blob.nbytes == want, (blob.nbytes, want)
+        return blob
 
     def _recycle_idle(self) -> None:
         """Recycle idle containers past keep-alive: release their

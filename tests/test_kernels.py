@@ -94,6 +94,210 @@ def test_kv_compact_sweep(dtype, nb, bt, m):
     assert jnp.array_equal(got, want)
 
 
+# ------------------------------------- fused snapshot capture/restore
+
+
+SNAP_CONFIGS = ["qwen2-7b", "mamba2-780m", "recurrentgemma-2b"]
+
+
+def _snap_caches(config, rows, t, seed=0):
+    """Reduced config + cache tree with non-degenerate contents (cache
+    leaves are zero-initialized, which would make byte-identity vacuous)."""
+    from repro.configs.base import get_config, reduced
+    from repro.models import model as M
+    cfg = reduced(get_config(config))
+    rng = np.random.default_rng(seed)
+    caches = jax.tree.map(
+        lambda x: jnp.asarray(rng.standard_normal(x.shape), dtype=x.dtype),
+        M.init_caches(cfg, rows, t))
+    return cfg, caches
+
+
+def _subjaxprs_of(v):
+    tname = type(v).__name__
+    if tname == "ClosedJaxpr":
+        return [v.jaxpr]
+    if tname == "Jaxpr":
+        return [v]
+    if isinstance(v, (list, tuple)):
+        return [j for item in v for j in _subjaxprs_of(item)]
+    return []
+
+
+def _count_pallas_calls(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for sub in _subjaxprs_of(v):
+                n += _count_pallas_calls(sub)
+    return n
+
+
+@pytest.mark.parametrize("config", SNAP_CONFIGS)
+@pytest.mark.parametrize("t,n", [(64, 1), (128, 3)])
+def test_snapshot_capture_pallas_vs_ref(config, t, n):
+    """The fused gather stages byte-identical blobs on both impls, for
+    attention-only, SSM, and rglru-hybrid cache trees."""
+    from repro.models import model as M
+    _, caches = _snap_caches(config, n + 2, t, seed=t + n)
+    layout = M.cache_row_layout(caches)
+    rows = jnp.asarray(list(range(1, n + 1))[::-1], jnp.int32)  # unordered
+    a = np.asarray(jax.device_get(
+        M.cache_read_rows(caches, rows, layout=layout, impl="pallas")))
+    b = np.asarray(jax.device_get(
+        M.cache_read_rows(caches, rows, layout=layout, impl="ref")))
+    assert a.shape == (n, layout.total_elems)
+    assert a.tobytes() == b.tobytes()
+
+
+@pytest.mark.parametrize("config", SNAP_CONFIGS)
+def test_snapshot_restore_pallas_vs_ref_and_untouched_rows(config):
+    """The fused scatter lands the staged bytes exactly where ref lands
+    them — and rows OUTSIDE the restored set keep their old bytes."""
+    from repro.models import model as M
+    _, caches = _snap_caches(config, 5, 128, seed=11)
+    layout = M.cache_row_layout(caches)
+    rows = jnp.asarray([3, 1], jnp.int32)
+    rng = np.random.default_rng(12)
+    blob = jnp.asarray(
+        rng.standard_normal((2, layout.total_elems)), dtype=layout.dtype)
+    got = M.cache_write_rows(caches, blob, rows, layout=layout,
+                             impl="pallas")
+    want = M.cache_write_rows(caches, blob, rows, layout=layout, impl="ref")
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert np.asarray(g).tobytes() == np.asarray(w).tobytes()
+    # untouched rows (0, 2, 4) are bit-identical to the pre-restore state
+    keep = jnp.asarray([0, 2, 4], jnp.int32)
+    before = np.asarray(jax.device_get(
+        M.cache_read_rows(caches, keep, layout=layout, impl="ref")))
+    after = np.asarray(jax.device_get(
+        M.cache_read_rows(got, keep, layout=layout, impl="ref")))
+    assert before.tobytes() == after.tobytes()
+
+
+@pytest.mark.parametrize("config", SNAP_CONFIGS)
+def test_snapshot_blob_matches_legacy_per_leaf_bytes(config):
+    """Layout contract: the fused blob's byte image IS the legacy
+    per-leaf ``tobytes()`` concatenation, so page digests built on the
+    blob match digests built the old way (BENCH_9 dedup baselines pin
+    these digests)."""
+    import hashlib
+    from repro.models import model as M
+    _, caches = _snap_caches(config, 4, 128, seed=5)
+    layout = M.cache_row_layout(caches)
+    row = 2
+    blob = np.asarray(jax.device_get(M.cache_read_rows(
+        caches, jnp.asarray([row], jnp.int32), layout=layout, impl="ref")))
+    legacy = b"".join(
+        np.asarray(leaf).tobytes()
+        for leaf in jax.tree.leaves(jax.device_get(
+            M.cache_read_row(caches, row))))
+    assert blob.tobytes() == legacy
+    assert hashlib.sha256(blob.tobytes()).hexdigest() == \
+        hashlib.sha256(legacy).hexdigest()
+
+
+def test_snapshot_roundtrip_bit_identity():
+    """capture -> restore -> capture reproduces the staged bytes."""
+    from repro.models import model as M
+    _, caches = _snap_caches("qwen2-7b", 4, 64, seed=3)
+    layout = M.cache_row_layout(caches)
+    rows = jnp.asarray([0, 3], jnp.int32)
+    blob = M.cache_read_rows(caches, rows, layout=layout, impl="pallas")
+    fresh = jax.tree.map(jnp.zeros_like, caches)
+    restored = M.cache_write_rows(fresh, blob, rows, layout=layout,
+                                  impl="pallas")
+    again = M.cache_read_rows(restored, rows, layout=layout, impl="pallas")
+    assert np.asarray(blob).tobytes() == np.asarray(again).tobytes()
+
+
+def test_snapshot_fused_single_launch():
+    """Dispatch-count half of the acceptance bar: the whole capture (and
+    the whole restore) of a rows batch is ONE pallas_call in the traced
+    computation — not one per leaf."""
+    from repro.kernels import kv_snapshot, ops
+    from repro.models import model as M
+    _, caches = _snap_caches("qwen2-7b", 4, 64)
+    leaves, axes, _ = M.cache_flat_axes(caches)
+    layout = M.cache_row_layout(caches)
+    rows = jnp.asarray([1, 2], jnp.int32)
+    assert len(leaves) > 1, "contract is vacuous with a single leaf"
+
+    cap = jax.make_jaxpr(lambda lv, rw: kv_snapshot.snapshot_capture(
+        lv, rw, layout=layout, interpret=True))(tuple(leaves), rows)
+    assert _count_pallas_calls(cap.jaxpr) == 1
+
+    blob = jnp.zeros((2, layout.total_elems), layout.dtype)
+    rst = jax.make_jaxpr(lambda lv, bl, rw: kv_snapshot.snapshot_restore(
+        lv, bl, rw, layout=layout, interpret=True))(
+            tuple(leaves), blob, rows)
+    assert _count_pallas_calls(rst.jaxpr) == 1
+
+    # and the ops-level dispatchers stay fused end-to-end (the jit eqn
+    # wraps the same single launch)
+    cap2 = jax.make_jaxpr(lambda lv, rw: ops.kv_snapshot_capture(
+        lv, rw, layout=layout, impl="pallas"))(tuple(leaves), rows)
+    assert _count_pallas_calls(cap2.jaxpr) == 1
+    rst2 = jax.make_jaxpr(lambda lv, bl, rw: ops.kv_snapshot_restore(
+        lv, bl, rw, layout=layout, impl="pallas"))(tuple(leaves), blob, rows)
+    assert _count_pallas_calls(rst2.jaxpr) == 1
+
+
+def test_engine_capture_restore_transfer_counts():
+    """Transfer-count half of the acceptance bar, on a real engine: a
+    snapshot capture is ONE fused launch + ONE device->host copy of
+    exactly the row's bytes, and a staged restore is ONE fused launch +
+    at most ONE host->device copy."""
+    from collections import deque
+    from repro.cluster import HostMemoryBroker
+    from repro.configs.base import get_config, reduced
+    from repro.core.arena import ArenaSpec
+    from repro.kernels import kv_snapshot
+    from repro.models import model as M
+    from repro.serving.engine import ServeEngine
+    from repro.serving.request import PROFILES, Request
+
+    cfg = reduced(get_config("qwen2-7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    spec = ArenaSpec.from_model(cfg, partition_tokens=128, n_partitions=8,
+                                block_tokens=32)
+    bpp = spec.blocks_per_partition
+    broker = HostMemoryBroker(budget_units=12 * bpp,
+                              snapshot_pool_units=4 * bpp)
+    eng = ServeEngine(cfg, params, spec, mode="hotmem", keep_alive=2.0,
+                      seed=0, broker=broker, replica_id="A")
+
+    def run_one(rid):
+        eng.submit(Request(rid=rid, profile=PROFILES["cnn"],
+                           submit_s=eng.now))
+        empty = deque()
+        while eng.active or eng.pending:
+            eng._tick(empty)
+
+    run_one("c0")                              # cold start, warm row parked
+    layout = eng._snapshot_layout()
+
+    kv_snapshot.reset_stats()
+    eng.now += eng.keep_alive + 1.0
+    eng._recycle_idle()                        # capture on expiry
+    s = kv_snapshot.STATS
+    assert s["capture_launches"] == 1
+    assert s["d2h_transfers"] == 1
+    assert s["d2h_bytes"] == layout.row_bytes
+    assert s["h2d_transfers"] == 0
+
+    kv_snapshot.reset_stats()
+    run_one("s0")                              # restore from the pool
+    assert eng.restore_starts == 1
+    s = kv_snapshot.STATS
+    assert s["restore_launches"] == 1
+    assert s["h2d_transfers"] <= 1
+    assert s["h2d_bytes"] <= layout.row_bytes
+    assert s["d2h_transfers"] == 0             # restore never reads back
+
+
 def test_paged_equals_partition_when_contiguous():
     """The two layouts must agree when the block table is the identity —
     the kernel-level statement of 'same math, different placement'."""

@@ -1,0 +1,250 @@
+"""The snapshot data plane's host-side half (PR-10 satellites): the
+module-level pagination / reassembly / carving helpers in
+``repro.serving.engine``, driven at ADVERSARIAL page sizes — page larger
+than the blob, blob not a multiple of the page, zero-unit tail pages,
+single-byte pages — asserting bit-identity of the round trip and
+stability of the content digests (BENCH_9's dedup baselines are keyed on
+them).
+
+The ``slow``-marked tests boot a real ``ServeEngine`` and read the
+``kv_snapshot.STATS`` transfer counters: a fully-mapped local CoW
+restore must move ZERO payload bytes host->device (the on-device remap
+path), and the paged capture/restore still pays exactly one transfer
+per direction.
+"""
+import hashlib
+from collections import deque
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import HostMemoryBroker
+from repro.core.arena import ArenaSpec
+from repro.serving.engine import (StagedRow, assemble_pages,
+                                  blob_to_row_tree, paginate_blob)
+from repro.serving.request import PROFILES, Request
+
+
+def _blob(n, seed=0):
+    return np.frombuffer(np.random.default_rng(seed).bytes(n),
+                         np.uint8).copy()
+
+
+def _units(specs):
+    return [u for _d, u, _b, _p in specs]
+
+
+def _roundtrip(blob, units, page_bytes, n_dev=1):
+    specs = paginate_blob(blob, units, page_bytes, n_dev)
+    out = assemble_pages(specs)
+    assert out.tobytes() == blob.tobytes(), "paginate/assemble drift"
+    assert sum(_units(specs)) == units
+    return specs
+
+
+# ---------------------------------------- adversarial page geometries
+
+
+def test_page_larger_than_blob_is_one_page():
+    blob = _blob(100)
+    specs = _roundtrip(blob, 8, page_bytes=4096)
+    assert len(specs) == 1
+    digest, units, nbytes, payload = specs[0]
+    assert (units, nbytes) == (8, 100) and payload == blob.tobytes()
+    assert digest == "%s-8" % hashlib.sha256(blob.tobytes()).hexdigest()[:16]
+
+
+def test_blob_not_multiple_of_page_keeps_short_tail():
+    blob = _blob(1000)
+    specs = _roundtrip(blob, 6, page_bytes=384)   # 384+384+232
+    assert [b for _d, _u, b, _p in specs] == [384, 384, 232]
+    # units spread front-loaded in whole stripes: 6 over 3 pages
+    assert _units(specs) == [2, 2, 2]
+
+
+def test_zero_unit_tail_pages():
+    """More pages than units: the tail pages charge ZERO units but still
+    carry their bytes — any subset of pages reassembles, and the total
+    unit charge is conserved."""
+    blob = _blob(64)
+    specs = _roundtrip(blob, 3, page_bytes=8)     # 8 pages, 3 units
+    assert len(specs) == 8
+    assert _units(specs) == [1, 1, 1, 0, 0, 0, 0, 0]
+    # zero-unit pages are still content-addressed with the charge folded
+    # into the digest suffix
+    assert all(d.endswith("-%d" % u) for d, u, _b, _p in specs)
+
+
+def test_single_byte_pages():
+    blob = _blob(17, seed=3)
+    specs = _roundtrip(blob, 17, page_bytes=1)
+    assert len(specs) == 17
+    assert all(b == 1 for _d, _u, b, _p in specs)
+    # identical bytes at different offsets collide to the SAME digest —
+    # that is the content-addressing contract, not a bug
+    by_content = {}
+    for d, _u, _b, p in specs:
+        by_content.setdefault(p, set()).add(d)
+    for digests in by_content.values():
+        assert len(digests) == 1
+
+
+def test_empty_blob_is_one_empty_page():
+    specs = _roundtrip(np.zeros(0, np.uint8), 4, page_bytes=64)
+    assert len(specs) == 1 and specs[0][2] == 0 and specs[0][1] == 4
+    assert assemble_pages(specs).nbytes == 0
+
+
+def test_mesh_stripe_unit_spread():
+    """Units spread in whole n_dev stripes so any page subset charges
+    balanced across devices."""
+    blob = _blob(96)
+    specs = _roundtrip(blob, 10, page_bytes=32, n_dev=2)  # 3 pages
+    assert _units(specs) == [4, 4, 2]
+    assert all(u % 2 == 0 for u in _units(specs))
+    with pytest.raises(AssertionError):
+        paginate_blob(blob, 7, 32, n_dev=2)       # units not striped
+
+
+def test_digest_formula_is_pinned():
+    """The exact digest string is a compatibility surface (dedup
+    baselines and the cross-replica page store key on it): 16 hex chars
+    of sha256 + '-' + unit charge.  Hard-coded literals so ANY formula
+    change fails here before it silently orphans committed baselines."""
+    blob = np.frombuffer(bytes(range(13)) * 3, np.uint8)   # 39 bytes
+    specs = paginate_blob(blob, 3, page_bytes=16)
+    assert [d for d, _u, _b, _p in specs] == [
+        "0c09fd5c74ccfe4d-1", "5ae378917d45cf3d-1", "c225cb836de0531e-1"]
+    empty = paginate_blob(np.zeros(0, np.uint8), 2, page_bytes=16)
+    assert empty[0][0] == "e3b0c44298fc1c14-2"
+
+
+def test_digests_stable_across_page_reorderings_of_same_content():
+    """Same bytes, same page size, same units => same digests, no matter
+    how the blob was produced (fresh array vs view of a larger staging
+    buffer)."""
+    base = _blob(512, seed=9)
+    view = np.concatenate([_blob(64, seed=1), base,
+                           _blob(64, seed=2)])[64:-64]
+    a = paginate_blob(base, 8, page_bytes=128)
+    b = paginate_blob(view, 8, page_bytes=128)
+    assert [s[0] for s in a] == [s[0] for s in b]
+
+
+# ---------------------------------------------- zero-copy carving
+
+
+def test_blob_to_row_tree_views_alias_the_blob():
+    """Carving a staged row never copies: every leaf is a view over the
+    blob's memory, and the leaves' byte images tile the blob exactly."""
+    metas = (((1, 4, 8), "float32"), ((1, 16), "float32"))
+    blob = _blob((4 * 8 + 16) * 4, seed=4)
+    tree = blob_to_row_tree(blob, jax.tree.structure([0, 0]), metas)
+    leaves = jax.tree.leaves(tree)
+    assert [tuple(x.shape) for x in leaves] == [(1, 4, 8), (1, 16)]
+    for leaf in leaves:
+        assert np.shares_memory(leaf, blob)
+    assert b"".join(x.tobytes() for x in leaves) == blob.tobytes()
+
+
+def test_staged_row_nbytes_single_source():
+    """StagedRow.nbytes is the blob's byte count — the one number both
+    the pool charge and pagination read (satellite: no second
+    materialization)."""
+    metas = (((1, 8), "float32"),)
+    blob = _blob(32, seed=5)
+    sr = StagedRow(blob=blob, treedef=jax.tree.structure([0]), metas=metas)
+    assert sr.nbytes == 32
+    assert sum(x.nbytes for x in jax.tree.leaves(sr.tree())) == sr.nbytes
+
+
+# ------------------------------------- engine transfer counts (slow)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+    from repro.configs.base import get_config, reduced
+    from repro.models import model as M
+    cfg = reduced(get_config("qwen2-7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    spec = ArenaSpec.from_model(cfg, partition_tokens=128, n_partitions=8,
+                                block_tokens=32)
+    return cfg, params, spec
+
+
+def _run_one(eng, rid, prof="cnn"):
+    eng.submit(Request(rid=rid, profile=PROFILES[prof], submit_s=eng.now))
+    empty = deque()
+    while eng.active or eng.pending:
+        eng._tick(empty)
+
+
+def _expire(eng):
+    eng.now += eng.keep_alive + 1.0
+    eng._recycle_idle()
+
+
+@pytest.mark.slow
+def test_fully_mapped_local_cow_restore_moves_zero_h2d_bytes(setup):
+    """Acceptance criterion: when every page of a local entry is still
+    resident on device, restore is an on-device remap — the payload
+    never crosses the host/device boundary (zero h2d transfers, zero h2d
+    bytes) and the remap counter ticks."""
+    from repro.kernels import kv_snapshot
+    from repro.serving.engine import ServeEngine
+    cfg, params, spec = setup
+    bpp = spec.blocks_per_partition
+    broker = HostMemoryBroker(budget_units=12 * bpp,
+                              snapshot_pool_units=4 * bpp)
+    eng = ServeEngine(cfg, params, spec, keep_alive=2.0, seed=0,
+                      broker=broker, replica_id="A",
+                      snapshot_page_bytes=4096)
+    _run_one(eng, "c0")
+    _expire(eng)                                  # capture + page index
+    snap = broker.snapshots.peek("cnn")
+    assert snap is not None and snap.pages is not None
+
+    kv_snapshot.reset_stats()
+    _run_one(eng, "r0")                           # every page device-mapped
+    assert eng.restore_starts == 1
+    s = kv_snapshot.STATS
+    assert s["remap_restores"] == 1
+    assert s["h2d_transfers"] == 0 and s["h2d_bytes"] == 0
+    assert s["restore_launches"] == 1             # still ONE fused scatter
+    ev = next(e for e in eng.events if e.kind == "restore")
+    assert ev.detail["pages_shared"] == ev.detail["pages_total"]
+    broker.check_invariants()
+
+
+@pytest.mark.slow
+def test_paged_restore_on_fresh_replica_pays_one_h2d(setup):
+    """A replica with none of the pages materializes them with ONE fused
+    host->device copy of the whole blob (not one per page, not one per
+    leaf)."""
+    from repro.kernels import kv_snapshot
+    from repro.serving.engine import ServeEngine
+    cfg, params, spec = setup
+    bpp = spec.blocks_per_partition
+    broker = HostMemoryBroker(budget_units=12 * bpp,
+                              snapshot_pool_units=4 * bpp)
+    a = ServeEngine(cfg, params, spec, keep_alive=2.0, seed=0,
+                    broker=broker, replica_id="A",
+                    snapshot_page_bytes=4096)
+    b = ServeEngine(cfg, params, spec, keep_alive=2.0, seed=1,
+                    broker=broker, replica_id="B",
+                    snapshot_page_bytes=4096)
+    _run_one(a, "c0")
+    _expire(a)
+    layout = a._snapshot_layout()
+
+    kv_snapshot.reset_stats()
+    _run_one(b, "r0")
+    assert b.restore_starts == 1
+    s = kv_snapshot.STATS
+    assert s["h2d_transfers"] == 1
+    assert s["h2d_bytes"] == layout.row_bytes
+    assert s["remap_restores"] == 0
+    assert s["restore_launches"] == 1
+    broker.check_invariants()

@@ -426,8 +426,10 @@ def test_restore_bit_identical_to_warm_adopt(setup):
     eng._recycle_idle()                        # capture on expiry
     snap = broker.snapshots.peek("cnn")
     assert snap is not None
+    # the staged payload is one contiguous blob; carving it (zero-copy
+    # views) must give back exactly the warm partition's leaves
     for a, b in zip(jax.tree.leaves(warm_state),
-                    jax.tree.leaves(snap.payload)):
+                    jax.tree.leaves(snap.payload.tree())):
         assert a.dtype == b.dtype and np.array_equal(a, b)
 
     # restore lands the same bytes in the fresh partition
